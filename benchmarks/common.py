@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: the paper's synthetic bimodal data generator
+(appendix D settings) and timing helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bimodal_data(key, n: int, gamma: float = 0.6, noise_sd: float = 0.5):
+    """The paper's bimodal distribution over R³ (appendix D.2):
+    with prob n/(n+n^γ): Unif[0,1]³; with prob n^γ/(n+n^γ): pdf ∏(5−2x_j) on
+    [2, 2.5]³. True f*(x) = g(‖x‖/3) with the paper's quartic g."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p2 = n**gamma / (n + n**gamma)
+    n2 = max(int(round(n * p2)), 4)
+    x1 = jax.random.uniform(k1, (n - n2, 3))
+    # inverse-CDF for pdf 2(5-2x)/9? — the paper's pdf ∏(5−2x_j), x_j ∈ [2,2.5]:
+    # CDF F(x) = (5x − x² − 6)/1.25·... sample via rejection for fidelity
+    u = jax.random.uniform(k2, (4 * n2, 3), minval=2.0, maxval=2.5)
+    acc = jax.random.uniform(k3, (4 * n2, 3)) < (5.0 - 2.0 * u) / 1.0 / 1.0
+    # accept elementwise by resampling columns; cheap approximation: weight-free
+    # inverse transform:  F⁻¹(p) = (5 − sqrt(25 − 4(6 + 1.125p)))/2 · …
+    p = jax.random.uniform(k2, (n2, 3))
+    x2 = 2.5 - 0.5 * jnp.sqrt(1.0 - p * (1.0 - (4.0 / 9.0)))  # linear-pdf inverse
+    X = jnp.concatenate([x1, x2], axis=0)
+
+    def g(x):
+        return 1.6 * jnp.abs((x - 0.4) * (x - 0.6)) - x * (x - 1) * (x - 2) - 0.5
+
+    f = g(jnp.linalg.norm(X, axis=1) / 3.0)
+    y = f + noise_sd * jax.random.normal(k4, (n,))
+    return X, y, f
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall-time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run sweep (results/dryrun.jsonl): per
+(arch × shape × mesh) the three terms, dominant bottleneck, and the
+MODEL_FLOPS/HLO_FLOPs usefulness ratio. Regenerate cells with:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+
+
+def load(path=RESULTS):
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return list(recs.values())
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("# no dry-run results found; run repro.launch.dryrun first")
+        return
+    ok = [r for r in recs if r.get("ok")]
+    fails = [r for r in recs if not r.get("ok")]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            r["bound_ms"] * 1e3 if "bound_ms" in r else max(
+                r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_fraction']:.3f} peakGB={r['peak_mem_bytes']/1e9:.1f}",
+        )
+    print(f"# roofline cells ok={len(ok)} failed={len(fails)}")
+    for r in fails:
+        print(f"# FAILED {r['arch']}/{r['shape']}/{r['mesh']}: {r.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

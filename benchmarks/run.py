@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import amm_bench, falkon_bench, fig1_toy, fig2_approx_error
+from benchmarks import fig3_tradeoff, kernel_bench, roofline, train_bench
+
+SUITES = {
+    "fig1": fig1_toy.main,          # paper Fig. 1 (toy tradeoff)
+    "fig2": fig2_approx_error.main, # paper Fig. 2 (approx error vs m)
+    "fig3": fig3_tradeoff.main,     # paper Fig. 3/4 (accuracy–efficiency)
+    "falkon": falkon_bench.main,    # paper appendix D.3 (Falkon-style PCG)
+    "amm": amm_bench.main,          # paper §5 extension
+    "kernels": kernel_bench.main,   # Pallas kernels + O(nmd) claim
+    "train": train_bench.main,      # end-to-end step throughput
+    "roofline": roofline.main,      # dry-run roofline table
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in picks:
+        try:
+            SUITES[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

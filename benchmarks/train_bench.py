@@ -1,0 +1,43 @@
+"""End-to-end training-step throughput on CPU for reduced configs (one per
+family) — tokens/s and the gradient-compression bytes saving."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import DataConfig, global_batch
+from repro.models import init_params
+from repro.optim.compress import CompressConfig
+from repro.train.step import TrainConfig, init_train_state, train_step
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for arch in ["stablelm-3b", "moonshot-v1-16b-a3b", "xlstm-125m", "zamba2-7b"]:
+        cfg = reduced(ARCHS[arch])
+        tc = TrainConfig()
+        state = init_train_state(init_params(key, cfg), tc)
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+        toks, labs = global_batch(dc, 0)
+        fn = jax.jit(lambda s, t, l: train_step(s, t, l, jax.numpy.int32(0), cfg, tc))
+        t = timeit(lambda: fn(state, toks, labs)[1]["loss"])
+        tokens = dc.global_batch * dc.seq_len
+        emit(f"train_step_{arch}", t * 1e6, f"tokens_per_s={tokens/max(t,1e-9):.0f}")
+
+    # compression bytes saving on a realistic grad pytree
+    cfg = reduced(ARCHS["stablelm-3b"])
+    cc = CompressConfig(ratio=0.125, m=4, min_rows=64)
+    tc = TrainConfig(compress=cc)
+    state = init_train_state(init_params(key, cfg), tc)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    toks, labs = global_batch(dc, 0)
+    fn = jax.jit(lambda s, t, l: train_step(s, t, l, jax.numpy.int32(0), cfg, tc))
+    _, mets = fn(state, toks, labs)
+    emit("sketched_grad_compression", 0.0,
+         f"allreduce_bytes_ratio={float(mets['compress_ratio']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

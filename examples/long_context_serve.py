@@ -1,0 +1,67 @@
+"""Long-context serving with the AccumSketch-compressed KV cache.
+
+  PYTHONPATH=src python examples/long_context_serve.py
+
+Decodes the same prompts twice — once with the exact KV cache (memory grows
+linearly with context) and once with the paper's sketched cache (fixed
+d_slots landmark slots; memory independent of context length) — and reports
+cache bytes + agreement of the generated continuations.
+
+This is the mechanism that makes the long_500k production shape feasible for
+full-attention architectures: a 500k-token exact cache for qwen1.5-110b would
+be ~10 GB/layer-group per request, while the sketched cache is a few MB.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import SketchAttnCfg
+from repro.models.model import init_params
+from repro.serve.engine import Engine, ServeConfig
+
+ARCH = "stablelm-3b"
+BATCH, PROMPT_LEN, NEW = 2, 48, 16
+
+
+def cache_mb(cache) -> float:
+    return sum(
+        np.prod(x.shape) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(cache)
+    ) / 1e6
+
+
+def main():
+    cfg = reduced(get_config(ARCH))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (BATCH, PROMPT_LEN), dtype=np.int32)
+
+    eng = Engine(cfg, params, ServeConfig(max_len=PROMPT_LEN + NEW))
+    cache_e = eng.new_cache(BATCH)
+    cache_e, logits_exact = eng.prefill_tokens(cache_e, prompts)
+    exact, _ = eng.generate(prompts, NEW)
+    print(f"[exact       ] cache={cache_mb(cache_e):8.3f} MB  "
+          f"tokens[0,:8]={exact[0][:8].tolist()}")
+
+    # projection dimension d_slots is the memory/accuracy knob: cache bytes are
+    # O(d_slots) regardless of context length; logit error → 0 as d grows.
+    sig = float(np.std(np.asarray(logits_exact)))
+    for d_slots in [16, 64, 256]:
+        c = dataclasses.replace(
+            cfg, sketch_attn=SketchAttnCfg(d_slots=d_slots, m=2, m_r=2))
+        eng = Engine(c, params, ServeConfig(max_len=PROMPT_LEN + NEW,
+                                            use_sketch=True))
+        cache_s = eng.new_cache(BATCH)
+        cache_s, logits_s = eng.prefill_tokens(cache_s, prompts)
+        out, _ = eng.generate(prompts, NEW)
+        agree = float(np.mean(exact == out))
+        rel = float(np.sqrt(np.mean(
+            (np.asarray(logits_s) - np.asarray(logits_exact)) ** 2))) / sig
+        print(f"[sketch d={d_slots:4d}] cache={cache_mb(cache_s):8.3f} MB  "
+              f"rel-logit-RMSE={rel:6.3f}  greedy agreement={agree:.0%}")
+
+
+if __name__ == "__main__":
+    main()

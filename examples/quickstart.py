@@ -1,0 +1,38 @@
+"""Quickstart: the paper's method in 30 lines.
+
+Builds an accumulation sketch (Algorithm 1), solves sketched KRR without ever
+forming the n×n kernel matrix, and compares against exact KRR and Nyström.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    get_kernel, insample_error, krr_exact_fitted,
+    krr_sketched_fit_matfree, make_accum_sketch, make_nystrom_sketch,
+)
+
+key = jax.random.PRNGKey(0)
+n, d = 2000, 40
+
+# synthetic regression data
+X = jax.random.uniform(key, (n, 3))
+f_true = jnp.sin(3 * X[:, 0]) + X[:, 1] ** 2 - X[:, 2]
+y = f_true + 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (n,))
+
+kern = get_kernel("gaussian", bandwidth=0.5)
+lam = 1e-3
+
+# exact KRR (O(n³)) — the reference
+fitted_exact = krr_exact_fitted(kern(X, X), y, lam)
+
+for name, sk in {
+    "nystrom (m=1)": make_nystrom_sketch(key, n, d),
+    "accumulation m=8": make_accum_sketch(key, n, d, m=8),
+}.items():
+    model = krr_sketched_fit_matfree(X, y, lam, sk, kern)   # O(n·m·d), K-free
+    err = insample_error(model.fitted, fitted_exact)
+    print(f"{name:20s} ‖f̂_S − f̂_n‖²_n = {float(err):.3e}")
+
+print("→ accumulation (medium m) ≈ Gaussian-sketch accuracy at Nyström cost.")

@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: msgpack + atomic rename + retained history +
+async writer thread.
+
+Layout: <dir>/step_<n>/state.msgpack (+ .meta.json), written to a tmp path and
+os.rename'd (atomic on POSIX) so a preemption mid-write never corrupts the
+latest checkpoint. `latest_step()` only trusts directories with the COMMIT
+marker. Arrays are stored host-unsharded (fetched with jax.device_get), so a
+restarted job with a *different mesh shape* can reshard on load — elastic
+scaling across restarts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+_COMMIT = "COMMITTED"
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _encode_leaf(x) -> dict:
+    a = np.asarray(jax.device_get(x))
+    # bf16 has no numpy dtype wire format — ship as uint16 view + tag
+    if a.dtype == jnp.bfloat16:
+        return {
+            "dtype": "bfloat16", "shape": list(a.shape),
+            "data": a.view(np.uint16).tobytes(),
+        }
+    return {"dtype": a.dtype.str, "shape": list(a.shape), "data": a.tobytes()}
+
+
+def _decode_leaf(d: dict) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        a = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return a.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def save(path: str, tree: PyTree, *, step: int, extra: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    payload = msgpack.packb(
+        {"leaves": [_encode_leaf(x) for x in leaves]}, use_bin_type=True
+    )
+    with open(os.path.join(tmp, "state.msgpack"), "wb") as f:
+        f.write(payload)
+    meta = {"step": step, "treedef": str(treedef), "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, _COMMIT), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore(path: str, like: PyTree, *, step: int | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of `like` (resharding happens when the caller
+    device_puts with its own shardings). Returns (tree, step)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "state.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = [_decode_leaf(x) for x in payload["leaves"]]
+    _, treedef = _flatten(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for name in os.listdir(path):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(path, name, _COMMIT)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def retain(path: str, keep: int = 3) -> None:
+    """Garbage-collect all but the newest `keep` committed checkpoints."""
+    if not os.path.isdir(path):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(path)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(path, n, _COMMIT))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint serialization with training: save() snapshots to
+    host memory (device_get) then writes on a daemon thread. wait() joins."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, tree: PyTree, *, step: int, extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            save(self.path, host_tree, step=step, extra=extra)
+            retain(self.path, self.keep)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

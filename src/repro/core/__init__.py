@@ -1,0 +1,42 @@
+"""Core library: the paper's accumulation-of-sub-sampling sketching framework."""
+from repro.core.sketch import (
+    AccumSketch,
+    make_accum_sketch,
+    make_gaussian_sketch,
+    make_nystrom_sketch,
+    make_sparse_rp,
+)
+from repro.core.apply import (
+    gram_sketch,
+    sketch_both,
+    sketch_kernel_cols,
+    sketch_left,
+    sketch_right,
+    sketch_vec,
+    unsketch_mat,
+    unsketch_vec,
+)
+from repro.core.krr import (
+    SketchedKRR,
+    insample_error,
+    krr_exact_fit,
+    krr_exact_fitted,
+    krr_sketched_fit,
+    krr_sketched_fit_dense,
+    krr_sketched_fit_matfree,
+    krr_sketched_fit_pcg,
+)
+from repro.core.kernels_math import gaussian_kernel, get_kernel, laplacian_kernel, matern_kernel
+from repro.core.leverage import (
+    approx_leverage_probs,
+    d_delta,
+    incoherence,
+    leverage_probs,
+    leverage_scores,
+    spectrum,
+    statistical_dimension,
+)
+from repro.core.ksat import KSatResult, ksat_check
+from repro.core.amm import amm, amm_error
+
+__all__ = [n for n in dir() if not n.startswith("_")]

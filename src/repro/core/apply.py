@@ -1,0 +1,100 @@
+"""Structural application of an AccumSketch — the paper's efficiency claim.
+
+The identities (paper §3.3):
+
+    K S     = Σ_i K S_(i)          — O(n·m·d) instead of O(n²·d)
+    Sᵀ K S  = Σ_i S_(i)ᵀ (K S)     — O(m·d²)  instead of O(n·d²)
+
+Because each S_(i) has one non-zero per column, K S_(i) is a signed/rescaled
+column gather of K, and S_(i)ᵀ M is a signed/rescaled row gather of M.
+None of these routines materializes S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import AccumSketch
+
+
+def sketch_right(K: jax.Array, sk: AccumSketch) -> jax.Array:
+    """K S for K of shape (r, n) → (r, d). O(r·m·d)."""
+    cols = jnp.take(K, sk.indices.reshape(-1), axis=1)          # (r, m*d)
+    cols = cols.reshape(K.shape[0], sk.m, sk.d)
+    return jnp.einsum("rmd,md->rd", cols, sk.coef)
+
+
+def sketch_left(sk: AccumSketch, M: jax.Array) -> jax.Array:
+    """Sᵀ M for M of shape (n, c) → (d, c). O(m·d·c)."""
+    rows = jnp.take(M, sk.indices.reshape(-1), axis=0)           # (m*d, c)
+    rows = rows.reshape(sk.m, sk.d, M.shape[-1])
+    return jnp.einsum("mdc,md->dc", rows, sk.coef)
+
+
+def sketch_vec(sk: AccumSketch, v: jax.Array) -> jax.Array:
+    """Sᵀ v for v of shape (n,) → (d,)."""
+    return sketch_left(sk, v[:, None])[:, 0]
+
+
+def unsketch_vec(sk: AccumSketch, w: jax.Array) -> jax.Array:
+    """S w for w of shape (d,) → (n,) via segment-sum (scatter-add)."""
+    contrib = (sk.coef * w[None, :]).reshape(-1)                 # (m*d,)
+    return jnp.zeros((sk.n,), w.dtype).at[sk.indices.reshape(-1)].add(contrib)
+
+
+def unsketch_mat(sk: AccumSketch, W: jax.Array) -> jax.Array:
+    """S W for W of shape (d, c) → (n, c)."""
+    contrib = sk.coef[..., None] * W[None, ...]                  # (m, d, c)
+    return (
+        jnp.zeros((sk.n, W.shape[-1]), W.dtype)
+        .at[sk.indices.reshape(-1)]
+        .add(contrib.reshape(-1, W.shape[-1]))
+    )
+
+
+def sketch_both(K: jax.Array, sk: AccumSketch) -> tuple[jax.Array, jax.Array]:
+    """(K S, Sᵀ K S) sharing the K S intermediate, as in the paper."""
+    KS = sketch_right(K, sk)
+    return KS, sketch_left(sk, KS)
+
+
+def gram_sketch(sk: AccumSketch) -> jax.Array:
+    """Sᵀ S (d, d) without materializing S.
+
+    SᵀS[j,j'] = Σ over coincident indices of coef products; computed via the
+    (m·d)-sparse representation: SᵀS = CᵀC where C is the (n, d) dense form —
+    but done through a (m·d)² coincidence check, O((md)²) ≪ O(n d²) when md ≪ n.
+    """
+    idx = sk.indices.reshape(-1)     # (md,)
+    cf = sk.coef.reshape(-1)         # (md,)
+    coincide = (idx[:, None] == idx[None, :]).astype(cf.dtype)   # (md, md)
+    weighted = coincide * (cf[:, None] * cf[None, :])
+    # column of S each flat entry belongs to:
+    col = jnp.tile(jnp.arange(sk.d), sk.m)
+    onehot = jax.nn.one_hot(col, sk.d, dtype=cf.dtype)           # (md, d)
+    return onehot.T @ weighted @ onehot
+
+
+def sketch_kernel_cols(
+    X: jax.Array, sk: AccumSketch, kernel_fn, *, chunk: int | None = None
+) -> jax.Array:
+    """C = K S without ever forming K:  O(n·m·d) kernel evaluations.
+
+    kernel_fn(A, B) -> (|A|, |B|) kernel matrix. Gathers the m·d landmark points,
+    evaluates the (n, m·d) slab, and contracts with the combination coefficients.
+    `chunk` optionally processes rows of X in chunks to bound peak memory.
+    """
+    landmarks = jnp.take(X, sk.indices.reshape(-1), axis=0)      # (m*d, d_X)
+
+    def _block(xb):
+        slab = kernel_fn(xb, landmarks)                          # (b, m*d)
+        return jnp.einsum("bmd,md->bd", slab.reshape(xb.shape[0], sk.m, sk.d), sk.coef)
+
+    if chunk is None or X.shape[0] <= chunk:
+        return _block(X)
+    nfull = (X.shape[0] // chunk) * chunk
+    body = jax.lax.map(_block, X[:nfull].reshape(-1, chunk, X.shape[1]))
+    out = body.reshape(nfull, sk.d)
+    if nfull < X.shape[0]:
+        out = jnp.concatenate([out, _block(X[nfull:])], axis=0)
+    return out

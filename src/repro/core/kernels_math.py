@@ -1,0 +1,53 @@
+"""Positive semi-definite kernel functions used by the KRR experiments.
+
+All functions map (n, p), (m, p) -> (n, m) and are jit/vmap friendly.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _sqdist(A: jax.Array, B: jax.Array) -> jax.Array:
+    # numerically-guarded pairwise squared distances
+    a2 = jnp.sum(A * A, axis=-1)[:, None]
+    b2 = jnp.sum(B * B, axis=-1)[None, :]
+    d2 = a2 + b2 - 2.0 * (A @ B.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def gaussian_kernel(A, B, bandwidth: float = 1.0):
+    """exp(-||a-b||² / (2σ²))."""
+    return jnp.exp(-_sqdist(A, B) / (2.0 * bandwidth**2))
+
+
+def laplacian_kernel(A, B, bandwidth: float = 1.0):
+    d = jnp.sqrt(_sqdist(A, B) + 1e-30)
+    return jnp.exp(-d / bandwidth)
+
+
+def matern_kernel(A, B, bandwidth: float = 1.0, nu: float = 1.5):
+    """Matérn with ν ∈ {0.5, 1.5, 2.5} (closed forms)."""
+    r = jnp.sqrt(_sqdist(A, B) + 1e-30) / bandwidth
+    if nu == 0.5:
+        return jnp.exp(-r)
+    if nu == 1.5:
+        c = math.sqrt(3.0)
+        return (1.0 + c * r) * jnp.exp(-c * r)
+    if nu == 2.5:
+        c = math.sqrt(5.0)
+        return (1.0 + c * r + 5.0 * r * r / 3.0) * jnp.exp(-c * r)
+    raise ValueError(f"unsupported nu={nu}")
+
+
+def get_kernel(name: str, bandwidth: float = 1.0, nu: float = 1.5):
+    if name == "gaussian":
+        return partial(gaussian_kernel, bandwidth=bandwidth)
+    if name == "laplacian":
+        return partial(laplacian_kernel, bandwidth=bandwidth)
+    if name == "matern":
+        return partial(matern_kernel, bandwidth=bandwidth, nu=nu)
+    raise ValueError(f"unknown kernel {name}")

@@ -1,0 +1,47 @@
+"""K-satisfiability (paper Definition 3) — the property driving Theorem 6.
+
+A sketch S is K-satisfiable for δ if
+  ‖U₁ᵀ S Sᵀ U₁ − I_{d_δ}‖_op ≤ 1/2
+  ‖Sᵀ U₂ Σ₂^{1/2}‖_op ≤ c √δ
+where U₁ spans the top-d_δ eigenspace of K/n. Used by tests/benchmarks to
+verify Theorem 8's (d, m) conditions empirically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.leverage import KrrSpectrum, d_delta, spectrum
+from repro.core.sketch import AccumSketch
+
+
+class KSatResult(NamedTuple):
+    top_deviation: jax.Array     # ‖U₁ᵀSSᵀU₁ − I‖_op
+    tail_norm: jax.Array         # ‖SᵀU₂Σ₂^{1/2}‖_op
+    tail_bound: jax.Array        # c·√δ reference (c=1)
+    satisfied: jax.Array         # bool for c = 2 (constant from the theorem)
+
+
+def ksat_check(
+    K: jax.Array, S_or_sketch, delta: float,
+    spec: KrrSpectrum | None = None, c: float = 2.0,
+) -> KSatResult:
+    spec = spec or spectrum(K)
+    dd = max(d_delta(spec, delta), 1)
+    if isinstance(S_or_sketch, AccumSketch):
+        S = S_or_sketch.dense()
+    else:
+        S = S_or_sketch
+    U1 = spec.eigvecs[:, :dd]
+    U2 = spec.eigvecs[:, dd:]
+    s2 = jnp.sqrt(jnp.maximum(spec.eigvals[dd:], 0.0))
+    StU1 = S.T @ U1                                   # (d, d_δ)
+    top = StU1.T @ StU1 - jnp.eye(dd, dtype=S.dtype)
+    top_dev = jnp.linalg.norm(top, ord=2)
+    tail = (S.T @ U2) * s2[None, :]                   # Sᵀ U₂ Σ₂^{1/2}
+    tail_norm = jnp.linalg.norm(tail, ord=2)
+    bound = jnp.sqrt(jnp.asarray(delta, S.dtype))
+    ok = (top_dev <= 0.5) & (tail_norm <= c * bound)
+    return KSatResult(top_dev, tail_norm, bound, ok)

@@ -1,0 +1,97 @@
+"""Statistical leverage scores, statistical dimension, and the paper's
+incoherence characteristic M (Theorem 8).
+
+  ℓ_i   = (K (K + nλI)⁻¹)_ii
+  d_stat = Σ ℓ_i = Σ σ_i/(σ_i + λ)        (σ_i = eigenvalues of K/n)
+  Ψ_δ   = [Σ̃(Σ̃ + δ I)]^{-1/2} Uᵀ ... column ψ_i; ψ̃_i its first d_δ entries
+  M     = max( max_i ‖ψ̃_i‖²/p_i ,  max_i (‖ψ_i‖² − ‖ψ̃_i‖²)/p_i )
+
+These are O(n³) diagnostics used in experiments and tests (the production
+sketch path never needs them — that is the paper's point: medium m substitutes
+for leverage-exact sampling).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KrrSpectrum(NamedTuple):
+    eigvals: jax.Array   # σ_i of K/n, descending (n,)
+    eigvecs: jax.Array   # U (n, n), columns matching eigvals
+
+
+def spectrum(K: jax.Array) -> KrrSpectrum:
+    n = K.shape[0]
+    w, U = jnp.linalg.eigh(K / n)
+    order = jnp.argsort(-w)
+    return KrrSpectrum(jnp.maximum(w[order], 0.0), U[:, order])
+
+
+def leverage_scores(K: jax.Array, lam: float, spec: KrrSpectrum | None = None) -> jax.Array:
+    """ℓ_i = (K(K+nλI)⁻¹)_ii = Σ_j U_ij² σ_j/(σ_j+λ)."""
+    spec = spec or spectrum(K)
+    ratio = spec.eigvals / (spec.eigvals + lam)
+    return jnp.einsum("ij,j->i", spec.eigvecs**2, ratio)
+
+
+def statistical_dimension(K: jax.Array, lam: float, spec: KrrSpectrum | None = None) -> jax.Array:
+    spec = spec or spectrum(K)
+    return jnp.sum(spec.eigvals / (spec.eigvals + lam))
+
+
+def d_delta(spec: KrrSpectrum, delta: float) -> int:
+    """d_δ = min{i : σ_i ≤ δ} − 1 (count of eigenvalues above δ)."""
+    return int(jnp.sum(spec.eigvals > delta))
+
+
+def incoherence(
+    K: jax.Array, delta: float, probs: jax.Array | None = None,
+    spec: KrrSpectrum | None = None,
+) -> jax.Array:
+    """The incoherence M of Theorem 8 under sampling distribution P (uniform default)."""
+    spec = spec or spectrum(K)
+    n = K.shape[0]
+    if probs is None:
+        probs = jnp.full((n,), 1.0 / n, dtype=K.dtype)
+    dd = d_delta(spec, delta)
+    scale = spec.eigvals / (spec.eigvals + delta)          # diag of Σ(Σ+δ)⁻¹ ... see note
+    # Ψ_δ = [Σ(Σ+δI)]^{-1/2} ... the paper's Ψ has columns ψ_i with
+    # ‖ψ_i‖² = Σ_j U_ij² σ_j/(σ_j+δ) (the ridge leverage form at level δ).
+    psi_sq = spec.eigvecs**2 * scale[None, :]              # (n, n): ψ_i components²
+    head = jnp.sum(psi_sq[:, :dd], axis=1)                 # ‖ψ̃_i‖²
+    tail = jnp.sum(psi_sq[:, dd:], axis=1)                 # ‖ψ_i‖² − ‖ψ̃_i‖²
+    return jnp.maximum(jnp.max(head / probs), jnp.max(tail / probs))
+
+
+def leverage_probs(K: jax.Array, lam: float, spec: KrrSpectrum | None = None) -> jax.Array:
+    """p_i ∝ ℓ_i — the leverage-based sampling distribution."""
+    l = leverage_scores(K, lam, spec)
+    l = jnp.maximum(l, 0.0)
+    return l / jnp.sum(l)
+
+
+def approx_leverage_probs(
+    key: jax.Array, K: jax.Array, lam: float, sketch_dim: int
+) -> jax.Array:
+    """BLESS-flavoured approximate leverage scores from a Nyström pilot sketch
+    (Alaoui & Mahoney 2015; Rudi et al. 2018):
+
+        ℓ̂_i = (1/nλ) · (K_ii − k_{iS} (K_SS + nλ I_s)⁻¹ k_{Si})
+
+    An over-estimate of ℓ_i(λ): a point far from every landmark keeps
+    ℓ̂_i ≈ K_ii/(nλ) (high — it is poorly represented, exactly the points
+    leverage sampling must catch), while a well-covered point's estimate is
+    cancelled down by the Nyström projection. O(n·s²) instead of O(n³)."""
+    n = K.shape[0]
+    idx = jax.random.choice(key, n, shape=(sketch_dim,), replace=False)
+    Knd = jnp.take(K, idx, axis=1)                          # (n, s)
+    Kdd = jnp.take(Knd, idx, axis=0)                        # (s, s)
+    reg = Kdd + n * lam * jnp.eye(sketch_dim, dtype=K.dtype)
+    sol = jnp.linalg.solve(reg, Knd.T)                      # (s, n)
+    proj = jnp.einsum("ns,sn->n", Knd, sol)                 # k_iᵀ(K_SS+nλ)⁻¹k_i
+    l_hat = (jnp.diag(K) - proj) / (n * lam)
+    l_hat = jnp.clip(l_hat, 1e-12, 1.0)
+    return l_hat / jnp.sum(l_hat)

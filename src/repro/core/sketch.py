@@ -1,0 +1,136 @@
+"""Algorithm 1 of the paper: sketching matrices as accumulations of m rescaled,
+randomly-signed sub-sampling matrices.
+
+The sketch is *structural*: we never materialize the n-by-d matrix S. It is fully
+described by
+
+  indices : (m, d) int32   — n_ij, the sampled row index of the single non-zero in
+                             column j of the i-th sub-sampling matrix S_(i)
+  signs   : (m, d) float   — r_ij, i.i.d. Rademacher
+  probs   : (n,)   float   — the sampling distribution P (p_k)
+
+so that  S = sum_i S_(i),  with  (S_(i))[:, j] = r_ij / sqrt(d * m * p_{n_ij}) e_{n_ij}.
+
+Special cases:
+  m = 1, uniform P, signs ignored  → classical Nyström sub-sampling sketch
+  m → ∞                            → sub-Gaussian (Gaussian) sketch by the CLT
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AccumSketch:
+    """Structural representation of an accumulation-of-sub-sampling sketch."""
+
+    indices: jax.Array  # (m, d) int32
+    signs: jax.Array    # (m, d) — ±1
+    probs: jax.Array    # (n,) sampling distribution
+    n: int              # ambient dimension (rows of S)
+
+    # -- pytree plumbing ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.signs, self.probs), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n=aux[0])
+
+    # -- derived quantities ---------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def coef(self) -> jax.Array:
+        """(m, d) combination coefficients r_ij / sqrt(d m p_{n_ij})."""
+        p = jnp.take(self.probs, self.indices, axis=0)  # (m, d)
+        return self.signs / jnp.sqrt(self.d * self.m * p)
+
+    def dense(self) -> jax.Array:
+        """Materialize S (n, d) — O(n d), for tests/small problems only."""
+        onehot = jax.nn.one_hot(self.indices, self.n, dtype=self.signs.dtype)  # (m,d,n)
+        return jnp.einsum("mdn,md->nd", onehot, self.coef)
+
+    def nnz_per_column(self) -> jax.Array:
+        """Number of distinct non-zeros per column (≤ m); density diagnostic."""
+        s = self.dense()
+        return jnp.sum(s != 0, axis=0)
+
+
+def make_accum_sketch(
+    key: jax.Array,
+    n: int,
+    d: int,
+    m: int = 1,
+    probs: jax.Array | None = None,
+    *,
+    signed: bool = True,
+    dtype=jnp.float32,
+) -> AccumSketch:
+    """Algorithm 1. Draw m*d indices from P with replacement + Rademacher signs.
+
+    probs=None means the uniform distribution (classical Nyström when m=1).
+    `signed=False` drops the Rademacher signs (pure Nyström; the paper notes the
+    signs cancel in K S for m=1 anyway).
+    """
+    if probs is None:
+        probs = jnp.full((n,), 1.0 / n, dtype=dtype)
+    else:
+        probs = jnp.asarray(probs, dtype=dtype)
+        probs = probs / jnp.sum(probs)
+    kidx, ksgn = jax.random.split(key)
+    indices = jax.random.choice(kidx, n, shape=(m, d), replace=True, p=probs)
+    if signed:
+        signs = jax.random.rademacher(ksgn, (m, d), dtype=dtype)
+    else:
+        signs = jnp.ones((m, d), dtype=dtype)
+    return AccumSketch(indices=indices.astype(jnp.int32), signs=signs, probs=probs, n=n)
+
+
+def make_nystrom_sketch(key, n, d, probs=None, dtype=jnp.float32) -> AccumSketch:
+    """m=1 special case — the classical (or leverage-weighted) Nyström sketch."""
+    return make_accum_sketch(key, n, d, m=1, probs=probs, signed=False, dtype=dtype)
+
+
+def make_gaussian_sketch(key, n, d, dtype=jnp.float32) -> jax.Array:
+    """Dense sub-Gaussian sketch (the m→∞ limit): i.i.d. N(0, 1/d)."""
+    return jax.random.normal(key, (n, d), dtype=dtype) / jnp.sqrt(d)
+
+
+def make_sparse_rp(key, n, d, s: float | None = None, dtype=jnp.float32) -> jax.Array:
+    """Very sparse random projection (Li, Hastie, Church 2006).
+
+    Entries are sqrt(s/d)·{+1 w.p. 1/(2s), -1 w.p. 1/(2s), 0 otherwise}.
+    Default s = sqrt(n) (their recommended density). Returned dense — it is a
+    *baseline*, the paper's method never materializes its sketch.
+    """
+    if s is None:
+        s = float(jnp.sqrt(n))
+    ku, ks = jax.random.split(key)
+    u = jax.random.uniform(ku, (n, d))
+    sgn = jax.random.rademacher(ks, (n, d), dtype=dtype)
+    mask = (u < 1.0 / s).astype(dtype)
+    return sgn * mask * jnp.sqrt(s / d).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("n", "d", "m", "signed"))
+def _jit_make(key, n, d, m, probs, signed):
+    return make_accum_sketch(key, n, d, m, probs, signed=signed)
+
+
+def make_accum_sketch_jit(key, n, d, m=1, probs=None, signed=True) -> AccumSketch:
+    """jit'd constructor (probs must be a concrete array or None)."""
+    if probs is None:
+        probs = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    return _jit_make(key, n, d, m, probs, signed)

@@ -1,0 +1,208 @@
+"""AccumAttention — the paper's accumulation-of-sub-sampling sketch transported
+to transformer attention.
+
+The attention matrix A = softmax(QKᵀ/√h) is an empirical (asymmetric) kernel
+matrix; the paper's sketched approximation A_S = A S (SᵀAS)⁻¹ SᵀA becomes, with
+landmarks built by the accumulation sketch *in the key/query feature domain*:
+
+    K̃ = Sᵀ K,  Q̃ = Sᵀ Q                                  (d landmarks, m accumulations)
+    F = softmax(Q K̃ᵀ/√h)  (n×d),  W = softmax(Q̃ K̃ᵀ/√h)  (d×d),
+    Bm = softmax(Q̃ Kᵀ/√h) (d×n)
+    out = F · W⁺ · (Bm V)                                  — O(n·d) not O(n²)
+
+m = 1 recovers Nyströmformer-style sub-sampled landmarks; m → ∞ approaches
+Gaussian-projected landmarks (JL). W⁺ via Newton–Schulz iteration (TPU friendly:
+matmuls only, no eigendecomp in the compiled graph).
+
+Streaming decode (long-context serving): the sketch is applied *row-wise*
+(every arriving token scatter-adds into `m_r` of the d landmark slots), which is
+the transpose-streamed view of Algorithm 1 — per-position load is Binomial in
+the batch construction and fixed `m_r` here; identical in expectation, and
+E[SSᵀ] = I_n holds for both. Softmax positivity requires nonnegative slot
+masses, so the decode path drops the Rademacher signs and instead tracks slot
+mass for an exact log-mass correction (exact when slots are singletons, i.e. it
+degrades gracefully to full attention when d ≥ seen tokens).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import AccumSketch, make_accum_sketch
+
+
+# --------------------------------------------------------------------------- #
+# Landmark construction
+# --------------------------------------------------------------------------- #
+
+def landmark_pool(x: jax.Array, sk: AccumSketch, *, normalize: bool = False) -> jax.Array:
+    """Sᵀ x over the sequence axis. x: (..., S, D) → (..., d, D).
+
+    Shared sketch across batch/head axes (indices index the sequence axis).
+
+    `normalize=True` rescales each landmark by the total coefficient mass so a
+    landmark is the *weighted mean* of its m pooled rows. This is the correct
+    transport of Algorithm 1 into softmax attention: the Rademacher signs of the
+    KRR sketch cancel inside the bilinear form K S but NOT through the softmax
+    nonlinearity, and an unnormalized sum rescales key magnitudes (distorting
+    softmax temperatures). A mean-pooled landmark stays on the key manifold —
+    m=1 recovers sampled Nyströmformer landmarks, m→∞ approaches cluster means."""
+    rows = jnp.take(x, sk.indices.reshape(-1), axis=-2)            # (..., m·d, D)
+    shp = rows.shape[:-2] + (sk.m, sk.d, rows.shape[-1])
+    coef = sk.coef.astype(x.dtype)
+    pooled = jnp.einsum("...mdk,md->...dk", rows.reshape(shp), coef)
+    if normalize:
+        mass = jnp.sum(jnp.abs(coef), axis=0)                      # (d,)
+        pooled = pooled / jnp.maximum(mass, 1e-30)[..., :, None]
+    return pooled
+
+
+def _newton_schulz_pinv(W: jax.Array, iters: int = 6) -> jax.Array:
+    """Iterative pseudo-inverse of a (d, d) matrix (Nyströmformer's trick)."""
+    d = W.shape[-1]
+    eye = jnp.eye(d, dtype=W.dtype)
+    norm = jnp.max(jnp.sum(jnp.abs(W), axis=-2), axis=-1) * jnp.max(
+        jnp.sum(jnp.abs(W), axis=-1), axis=-1
+    )
+    Z = jnp.swapaxes(W, -1, -2) / norm[..., None, None]
+
+    def body(Z, _):
+        WZ = W @ Z
+        Z = 0.25 * Z @ (13.0 * eye - WZ @ (15.0 * eye - WZ @ (7.0 * eye - WZ)))
+        return Z, None
+
+    Z, _ = jax.lax.scan(body, Z, None, length=iters)
+    return Z
+
+
+def accum_attention(
+    q: jax.Array,          # (B, H, Sq, Dh)
+    k: jax.Array,          # (B, H, Sk, Dh)
+    v: jax.Array,          # (B, H, Sk, Dh)
+    sk: AccumSketch,       # sketch over the key sequence axis (n = Sk)
+    *,
+    pinv_iters: int = 6,
+) -> jax.Array:
+    """Sketched (landmark) attention, O(S·d). Bidirectional (prefill/encoder).
+
+    Returns (B, H, Sq, Dh). float32 accumulation for the softmaxes.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    kt = landmark_pool(k, sk, normalize=True)                       # (B,H,d,Dh)
+    qt = landmark_pool(q, sk, normalize=True)                       # (B,H,d,Dh)
+    f32 = jnp.float32
+    F = jax.nn.softmax((q.astype(f32) @ jnp.swapaxes(kt, -1, -2).astype(f32)) * scale, axis=-1)
+    W = jax.nn.softmax((qt.astype(f32) @ jnp.swapaxes(kt, -1, -2).astype(f32)) * scale, axis=-1)
+    Bm = jax.nn.softmax((qt.astype(f32) @ jnp.swapaxes(k, -1, -2).astype(f32)) * scale, axis=-1)
+    Winv = _newton_schulz_pinv(W, pinv_iters)
+    out = F @ (Winv @ (Bm @ v.astype(f32)))
+    return out.astype(q.dtype)
+
+
+def exact_attention(q, k, v, *, causal: bool = False) -> jax.Array:
+    """O(S²) reference attention (oracle for tests / small configs)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = (q.astype(jnp.float32) @ jnp.swapaxes(k, -1, -2).astype(jnp.float32)) * scale
+    if causal:
+        sq, sk_ = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((sq, sk_), bool), k=sk_ - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    return (jax.nn.softmax(logits, axis=-1) @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Streaming sketched KV cache (long-context decode)
+# --------------------------------------------------------------------------- #
+
+class SketchCache(NamedTuple):
+    """Compressed KV cache: d_slots landmark slots per layer/head."""
+    k_sum: jax.Array    # (B, Hkv, d_slots, Dh) — Σ c_i k_i per slot
+    v_sum: jax.Array    # (B, Hkv, d_slots, Dh)
+    mass: jax.Array     # (B, Hkv, d_slots)     — Σ c_i per slot
+
+
+def init_sketch_cache(batch, kv_heads, d_slots, head_dim, dtype=jnp.float32) -> SketchCache:
+    z = jnp.zeros((batch, kv_heads, d_slots, head_dim), dtype)
+    return SketchCache(z, z, jnp.zeros((batch, kv_heads, d_slots), dtype))
+
+
+def update_sketch_cache(
+    cache: SketchCache, k_t: jax.Array, v_t: jax.Array, slots: jax.Array
+) -> SketchCache:
+    """Scatter-add one new token into m_r slots.
+
+    k_t, v_t: (B, Hkv, Dh); slots: (m_r,) int32 — host-side counter RNG draw,
+    shared across batch/heads (one gather pattern → one vectorized scatter)."""
+    m_r = slots.shape[0]
+    c = 1.0 / jnp.sqrt(jnp.asarray(m_r, cache.k_sum.dtype))
+    k_add = jnp.broadcast_to(
+        (c * k_t)[:, :, None, :], k_t.shape[:2] + (m_r,) + k_t.shape[-1:]
+    )
+    v_add = jnp.broadcast_to(
+        (c * v_t)[:, :, None, :], v_t.shape[:2] + (m_r,) + v_t.shape[-1:]
+    )
+    mass_add = jnp.full(cache.mass.shape[:2] + (m_r,), c, cache.mass.dtype)
+    return SketchCache(
+        cache.k_sum.at[:, :, slots, :].add(k_add),
+        cache.v_sum.at[:, :, slots, :].add(v_add),
+        cache.mass.at[:, :, slots].add(mass_add),
+    )
+
+
+def sketch_decode_attend(q_t: jax.Array, cache: SketchCache) -> jax.Array:
+    """One-token attention over the compressed cache with log-mass correction.
+
+    q_t: (B, H, Dh) with H = G·Hkv (GQA groups broadcast). Returns (B, H, Dh).
+    logits_j = q·k̄_j/√h + log m_j,  k̄_j = k_sum_j / m_j — exact softmax
+    attention when every slot holds one token."""
+    B, H, Dh = q_t.shape
+    Hkv = cache.k_sum.shape[1]
+    G = H // Hkv
+    f32 = jnp.float32
+    mass = jnp.maximum(cache.mass.astype(f32), 1e-30)               # (B,Hkv,d)
+    kbar = cache.k_sum.astype(f32) / mass[..., None]
+    vbar = cache.v_sum.astype(f32) / mass[..., None]
+    qg = q_t.reshape(B, Hkv, G, Dh).astype(f32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, f32))
+    logits = jnp.einsum("bhgk,bhdk->bhgd", qg, kbar) * scale
+    logits = logits + jnp.log(mass)[:, :, None, :]
+    empty = cache.mass[:, :, None, :] <= 0
+    logits = jnp.where(jnp.broadcast_to(empty, logits.shape), -1e30, logits)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgd,bhdk->bhgk", p, vbar)
+    return out.reshape(B, H, Dh).astype(q_t.dtype)
+
+
+def decode_slots(key: jax.Array, step, d_slots: int, m_r: int) -> jax.Array:
+    """Counter-based slot draw for position `step` (deterministic, resumable)."""
+    return jax.random.randint(jax.random.fold_in(key, step), (m_r,), 0, d_slots)
+
+
+def make_seq_sketch(key, seq_len: int, d: int, m: int = 1, *, local: bool = True) -> AccumSketch:
+    """Accumulation sketch over sequence positions (prefill path).
+
+    Unsigned: signs do not commute with softmax (see `landmark_pool`).
+
+    `local=True` (default) draws one uniform center per column and pools the m
+    *contiguous* positions starting there. The paper's framework requires only
+    i.i.d. COLUMNS — "the coordinates in each column are correlated and can
+    follow different distributions" — so a contiguous block around an i.i.d.
+    center is a faithful instance of Algorithm 1. For sequence data locality is
+    the right correlation structure: pooling m adjacent tokens averages noise
+    *within* a semantic cluster (the Nyströmformer segment-mean insight),
+    whereas pooling m i.i.d.-uniform positions mixes unrelated clusters and
+    makes the landmark worse as m grows. `local=False` gives the i.i.d.-uniform
+    variant for ablation."""
+    if not local or m == 1:
+        return make_accum_sketch(key, seq_len, d, m=m, signed=False)
+    probs = jnp.full((seq_len,), 1.0 / seq_len, dtype=jnp.float32)
+    centers = jax.random.randint(key, (d,), 0, seq_len)
+    indices = (centers[None, :] + jnp.arange(m)[:, None]) % seq_len   # (m, d)
+    return AccumSketch(
+        indices=indices.astype(jnp.int32),
+        signs=jnp.ones((m, d), jnp.float32),
+        probs=probs,
+        n=seq_len,
+    )

@@ -1,0 +1,64 @@
+"""Deterministic, stateless synthetic LM data pipeline.
+
+Design for fault tolerance: batch t is a pure function of (seed, step) — a
+restarted job at step t reproduces exactly the stream a non-restarted job
+would have seen, with no iterator state to checkpoint. Host-sharding: each
+data-parallel host materializes only its slice (process_index-based offsets),
+matching how a multi-pod deployment feeds jax.make_array_from_process_data.
+
+The synthetic distribution is a order-2 Markov chain over the vocab with a
+power-law unigram marginal, so cross-entropy has meaningful structure
+(a model can actually learn; loss decreasing is asserted in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def _token_block(key, cfg: DataConfig, shape) -> jax.Array:
+    """Markov-ish synthetic tokens: next = f(prev) + noise, power-law marginal."""
+    k1, k2 = jax.random.split(key)
+    # power-law unigram draw
+    u = jax.random.uniform(k1, shape, minval=1e-6, maxval=1.0)
+    base = (cfg.vocab_size * (u ** 2.5)).astype(jnp.int32) % cfg.vocab_size
+    # deterministic mixing: makes position t predictable from t-1 half the time
+    mix = jax.random.bernoulli(k2, 0.5, shape)
+    rolled = (jnp.roll(base, 1, axis=-1) * 31 + 7) % cfg.vocab_size
+    return jnp.where(mix, rolled, base)
+
+
+def host_batch(cfg: DataConfig, step: int) -> tuple[np.ndarray, np.ndarray]:
+    """This host's (tokens, labels) slice for `step`: shapes
+    (global_batch / n_hosts, seq_len)."""
+    assert cfg.global_batch % cfg.n_hosts == 0
+    per_host = cfg.global_batch // cfg.n_hosts
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), cfg.host_id
+    )
+    block = _token_block(key, cfg, (per_host, cfg.seq_len + 1))
+    block = np.asarray(block)
+    return block[:, :-1].astype(np.int32), block[:, 1:].astype(np.int32)
+
+
+def global_batch(cfg: DataConfig, step: int) -> tuple[np.ndarray, np.ndarray]:
+    """All-hosts batch (single-host testing convenience)."""
+    toks, labs = [], []
+    for h in range(cfg.n_hosts):
+        t, l = host_batch(dataclasses.replace(cfg, host_id=h), step)
+        toks.append(t)
+        labs.append(l)
+    return np.concatenate(toks), np.concatenate(labs)

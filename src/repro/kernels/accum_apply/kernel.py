@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused gather-accumulate K·S for accumulation sketches.
+
+TPU adaptation (DESIGN.md §3): instead of a CPU-style sparse SpMM, the kernel
+tiles K's rows into VMEM blocks and, for each output tile, accumulates the m
+sub-sketches in VREGs. The sketch indices/coefs ride in as scalar-prefetch
+operands (SMEM) so the column gather addresses are known before the tile loop
+— the Pallas analogue of the paper's "few extra matrix additions".
+
+Grid: (R/bm, d/bd). Per step:
+  K block   (bm, N)  — rows resident in VMEM (wrapper chunks N when large)
+  out block (bm, bd) — accumulated over m picks per output column
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, coef_ref, K_ref, out_ref, *, m: int, bd: int):
+    j0 = pl.program_id(1) * bd
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for jj in range(bd):                       # static loop over tile columns
+        col_acc = jnp.zeros((K_ref.shape[0],), jnp.float32)
+        for i in range(m):                     # accumulate the m sub-sketches
+            c = coef_ref[i, j0 + jj]
+            src = idx_ref[i, j0 + jj]
+            col = pl.load(K_ref, (slice(None), pl.dslice(src, 1)))  # (bm, 1)
+            col_acc = col_acc + c.astype(jnp.float32) * col[:, 0].astype(jnp.float32)
+        acc = acc.at[:, jj].set(col_acc)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "interpret"))
+def accum_apply(
+    K: jax.Array, idx: jax.Array, coef: jax.Array, *,
+    bm: int = 256, bd: int = 8, interpret: bool = True,
+) -> jax.Array:
+    """K: (R, N); idx/coef: (m, d). Returns K S (R, d).
+
+    VMEM budget: bm × N × itemsize per K tile — the ops.py wrapper splits N
+    into ≤8k-column chunks and sums partial results (addition commutes with
+    the accumulation, same identity the paper uses)."""
+    R, N = K.shape
+    m, d = idx.shape
+    bm = min(bm, R)
+    bd = min(bd, d)
+    assert R % bm == 0 and d % bd == 0, (R, bm, d, bd)
+    grid = (R // bm, d // bd)
+    return pl.pallas_call(
+        functools.partial(_kernel, m=m, bd=bd),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,             # idx, coef in SMEM
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, N), lambda r, j, *_: (r, 0))],
+            out_specs=pl.BlockSpec((bm, bd), lambda r, j, *_: (r, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, d), K.dtype),
+        interpret=interpret,
+    )(idx, coef, K)

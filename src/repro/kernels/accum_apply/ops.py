@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the accum_apply kernel: chunks wide K so each
+Pallas tile fits VMEM, and exposes an AccumSketch-native entry point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import AccumSketch
+from repro.kernels.accum_apply.kernel import accum_apply
+
+MAX_COLS = 8192   # per-tile K columns: bm·MAX_COLS·4B ≤ ~8MB VMEM at bm=256
+
+
+def sketch_right_kernel(
+    K: jax.Array, sk: AccumSketch, *, bm: int = 256, bd: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """K S via the Pallas kernel; splits K's columns into chunks and sums the
+    per-chunk partial products (the paper's accumulation identity)."""
+    R, N = K.shape
+    coef = sk.coef.astype(jnp.float32)
+    if N <= MAX_COLS:
+        return accum_apply(K, sk.indices, coef, bm=bm, bd=bd, interpret=interpret)
+    out = jnp.zeros((R, sk.d), K.dtype)
+    for lo in range(0, N, MAX_COLS):
+        hi = min(lo + MAX_COLS, N)
+        # indices falling outside [lo, hi) are redirected to column 0 with
+        # coefficient 0 — the partial products then sum to the exact result
+        inside = (sk.indices >= lo) & (sk.indices < hi)
+        idx_c = jnp.where(inside, sk.indices - lo, 0).astype(jnp.int32)
+        coef_c = jnp.where(inside, coef, 0.0)
+        out = out + accum_apply(K[:, lo:hi], idx_c, coef_c, bm=bm, bd=bd,
+                                interpret=interpret).astype(out.dtype)
+    return out

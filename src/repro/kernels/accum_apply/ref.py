@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the accum_apply kernel: K S via gather-accumulate.
+
+out[r, j] = Σ_{i<m} coef[i, j] · K[r, idx[i, j]]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accum_apply_ref(K: jax.Array, idx: jax.Array, coef: jax.Array) -> jax.Array:
+    """K: (R, N); idx: (m, d) int32 in [0, N); coef: (m, d). Returns (R, d)."""
+    cols = jnp.take(K, idx.reshape(-1), axis=1)             # (R, m·d)
+    cols = cols.reshape(K.shape[0], *idx.shape)             # (R, m, d)
+    return jnp.einsum("rmd,md->rd", cols.astype(jnp.float32),
+                      coef.astype(jnp.float32)).astype(K.dtype)

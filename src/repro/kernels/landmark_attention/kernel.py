@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: the O(S·L) stage of AccumAttention (sketched attention).
+
+out = softmax(q k̃ᵀ/√Dh) @ M, with L = d_slots landmarks. The landmark set is
+small by construction (that is the paper's point), so k̃ and M stay resident in
+VMEM across the whole grid while q streams through in (bq, Dh) tiles — one
+softmax pass per tile, no online-softmax bookkeeping needed (full row of
+logits fits in VREGs). MXU-aligned: bq, L, Dh all multiples of the 128 lane
+width in production configs.
+
+Grid: (S/bq,). Per step:  q tile (bq, Dh) · k̃ᵀ (Dh, L) → logits (bq, L)
+                          softmax → p · M (L, Dv) → out tile (bq, Dv)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, kt_ref, M_ref, out_ref, *, scale: float):
+    q = q_ref[...].astype(jnp.float32)
+    kt = kt_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                             # (bq, L)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jax.lax.dot_general(
+        p, M_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def landmark_attention(
+    q: jax.Array, kt: jax.Array, M: jax.Array, *,
+    bq: int = 256, interpret: bool = True,
+) -> jax.Array:
+    """q: (S, Dh); kt: (L, Dh); M: (L, Dv) → (S, Dv)."""
+    S, Dh = q.shape
+    L, Dv = M.shape
+    assert kt.shape == (L, Dh)
+    bq = min(bq, S)
+    assert S % bq == 0, (S, bq)
+    scale = 1.0 / (Dh ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(S // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, Dh), lambda i: (i, 0)),
+            pl.BlockSpec((L, Dh), lambda i: (0, 0)),   # landmarks VMEM-resident
+            pl.BlockSpec((L, Dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, Dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, Dv), q.dtype),
+        interpret=interpret,
+    )(q, kt, M)

@@ -1,0 +1,38 @@
+"""jit'd wrapper: batched/multi-head AccumAttention using the Pallas kernel for
+the O(S·L) landmark stage (vmapped over batch×head)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import AccumSketch
+from repro.core.sketched_attention import _newton_schulz_pinv, landmark_pool
+from repro.kernels.landmark_attention.kernel import landmark_attention
+
+
+def accum_attention_kernel(
+    q: jax.Array, k: jax.Array, v: jax.Array, sk: AccumSketch, *,
+    bq: int = 256, pinv_iters: int = 6, interpret: bool = True,
+) -> jax.Array:
+    """Full sketched attention (B, H, S, Dh) with the hot stage in Pallas.
+
+    Stages (matching core.sketched_attention.accum_attention):
+      k̃/q̃ = landmark pools;  W = softmax(q̃k̃ᵀ);  Bm = softmax(q̃Kᵀ);
+      M = W⁺(Bm V)  [small, plain XLA];  out = softmax(QK̃ᵀ)M  [Pallas].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    f32 = jnp.float32
+    kt = landmark_pool(k, sk, normalize=True)
+    qt = landmark_pool(q, sk, normalize=True)
+    W = jax.nn.softmax((qt.astype(f32) @ jnp.swapaxes(kt, -1, -2).astype(f32)) * scale, axis=-1)
+    Bm = jax.nn.softmax((qt.astype(f32) @ jnp.swapaxes(k, -1, -2).astype(f32)) * scale, axis=-1)
+    M = _newton_schulz_pinv(W, pinv_iters) @ (Bm @ v.astype(f32))      # (B,H,L,Dv)
+
+    B, H = q.shape[:2]
+    qf = q.reshape((B * H,) + q.shape[2:])
+    ktf = kt.reshape((B * H,) + kt.shape[2:])
+    Mf = M.astype(q.dtype).reshape((B * H,) + M.shape[2:])
+    out = jax.vmap(
+        lambda a, b, c: landmark_attention(a, b, c, bq=bq, interpret=interpret)
+    )(qf, ktf, Mf)
+    return out.reshape(q.shape[:2] + out.shape[1:])

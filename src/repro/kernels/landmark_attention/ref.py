@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the landmark_attention kernel.
+
+out = softmax(q k̃ᵀ / √Dh) @ M   — the O(S·d_landmark) stage of AccumAttention
+(M = W⁺ (B V) is precomputed; see core/sketched_attention.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def landmark_attention_ref(q: jax.Array, kt: jax.Array, M: jax.Array) -> jax.Array:
+    """q: (S, Dh); kt: (L, Dh); M: (L, Dv). Returns (S, Dv)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = q.astype(jnp.float32) @ kt.T.astype(jnp.float32) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    return (p @ M.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,33 @@
+"""Production meshes. A FUNCTION (not module-level constant) so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod prepends a pod axis (2×16×16 = 512).
+
+    Uses the first prod(shape) available devices, so it works both on real
+    slices and under --xla_force_host_platform_device_count placeholders."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devs)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)."
+        )
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over whatever devices exist (tests)."""
+    import jax
+
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         devices=jax.devices()[: n_data * n_model])

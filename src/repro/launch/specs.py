@@ -1,0 +1,139 @@
+"""ShapeDtypeStruct stand-ins + sharding assignments for every
+(architecture × input-shape) dry-run cell. No device allocation happens here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shlib
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.models.model import decode_step, init_cache, init_params, prefill
+from repro.train.step import TrainConfig, init_train_state, train_step
+
+PyTree = Any
+
+
+class Cell(NamedTuple):
+    """Everything dryrun needs: a step fn, abstract args, and in_shardings."""
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    label: str
+
+
+def _sds_tree(f):
+    return jax.eval_shape(f)
+
+
+def params_abstract(cfg: ModelConfig) -> PyTree:
+    return _sds_tree(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def uses_sketch_cache(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k uses the AccumSketch-compressed cache on attention blocks
+    (the paper's technique is what makes 500k-context serving feasible for
+    full-attention archs; SSM blocks are natively O(1))."""
+    return shape.name == "long_500k" and cfg.has_attention
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, tc: TrainConfig) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    state_sds = _sds_tree(
+        lambda: init_train_state(init_params(jax.random.PRNGKey(0), cfg), tc)
+    )
+    params_sh = shlib.params_shardings(mesh, state_sds.params, cfg.sharding_policy)
+    opt_sh = shlib.opt_shardings(mesh, state_sds.opt, params_sh)
+    ef_sh = None if state_sds.ef is None else jax.tree_util.tree_map(
+        lambda _: shlib.replicated(mesh), state_sds.ef
+    )
+    state_sh = type(state_sds)(params_sh, opt_sh, ef_sh)
+    tok_sh = NamedSharding(mesh, shlib.batch_spec(mesh, B, policy=cfg.sharding_policy))
+    rep = shlib.replicated(mesh)
+
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [state_sds, tokens, labels, step]
+    shardings = [state_sh, tok_sh, tok_sh, rep]
+
+    if cfg.frontend:
+        cond = jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.d_model), jnp.bfloat16)
+        cond_sh = NamedSharding(mesh, shlib.batch_spec(mesh, B, extra_dims=2, policy=cfg.sharding_policy))
+        fn = lambda st, t, l, i, c: train_step(st, t, l, i, cfg, tc, cond=c)
+        args.append(cond)
+        shardings.append(cond_sh)
+    else:
+        fn = lambda st, t, l, i: train_step(st, t, l, i, cfg, tc)
+    return Cell(fn, tuple(args), tuple(shardings), f"{cfg.name}/{shape.name}")
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, q_chunk: int = 512) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    p_sds = params_abstract(cfg)
+    p_sh = shlib.params_shardings(mesh, p_sds, cfg.sharding_policy)
+    tok_sh = NamedSharding(mesh, shlib.batch_spec(mesh, B, policy=cfg.sharding_policy))
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    args = [p_sds, tokens]
+    shardings = [p_sh, tok_sh]
+    if cfg.frontend:
+        cond = jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.d_model), jnp.bfloat16)
+        args.append(cond)
+        shardings.append(NamedSharding(mesh, shlib.batch_spec(mesh, B, extra_dims=2, policy=cfg.sharding_policy)))
+        fn = lambda p, t, c: prefill(p, t, cfg, cond=c, q_chunk=q_chunk)
+    else:
+        fn = lambda p, t: prefill(p, t, cfg, q_chunk=q_chunk)
+    return Cell(fn, tuple(args), tuple(shardings), f"{cfg.name}/{shape.name}")
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    sketch = uses_sketch_cache(cfg, shape)
+    cache_sds = _sds_tree(lambda: init_cache(cfg, B, S, use_sketch=sketch))
+    p_sds = params_abstract(cfg)
+    p_sh = shlib.params_shardings(mesh, p_sds, cfg.sharding_policy)
+    cache_sh = type(cache_sds)(shlib.cache_shardings(mesh, cache_sds.blocks, B, cfg.sharding_policy))
+    rep = shlib.replicated(mesh)
+    tok_sh = NamedSharding(mesh, P(shlib.batch_spec(mesh, B, policy=cfg.sharding_policy)[0]))
+
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [p_sds, cache_sds, token, pos]
+    shardings = [p_sh, cache_sh, tok_sh, rep]
+    if sketch:
+        slots = jax.ShapeDtypeStruct((cfg.sketch_attn.m_r,), jnp.int32)
+        args.append(slots)
+        shardings.append(rep)
+        fn = lambda p, c, t, i, s: decode_step(p, c, t, i, cfg, slots=s, use_sketch=True)
+    else:
+        fn = lambda p, c, t, i: decode_step(p, c, t, i, cfg)
+    return Cell(fn, tuple(args), tuple(shardings), f"{cfg.name}/{shape.name}")
+
+
+def make_cell(arch: str, shape_name: str, mesh, *, tc: TrainConfig | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        # n_micro=4: the scan-over-layers carry stack (n_layers × B·S·D bf16)
+        # is the dominant training temp; microbatching divides it by n_micro.
+        # dp_only archs keep n_micro=1: their global batch exactly covers the
+        # chips, and the models are small enough not to need the carry split.
+        if tc is None:
+            n_micro = 1 if cfg.sharding_policy == "dp_only" else 4
+            tc = TrainConfig(n_micro=n_micro)
+        return train_cell(cfg, shape, mesh, tc)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh)
+    return decode_cell(cfg, shape, mesh)
+
+
+def input_specs(arch: str, shape_name: str) -> tuple:
+    """Public helper: the abstract inputs for a cell (mesh-independent)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    return make_cell(arch, shape_name, make_debug_mesh()).args

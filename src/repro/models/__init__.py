@@ -1,0 +1,14 @@
+from repro.models.model import (
+    DecodeCache,
+    active_param_count,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    output_embedding,
+    param_count,
+    prefill,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

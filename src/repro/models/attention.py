@@ -1,0 +1,174 @@
+"""Attention blocks: GQA + RoPE, chunked-causal (memory-safe prefill), sliding
+window, KV-cache decode, and AccumSketch (paper technique) compressed decode."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sketched_attention import (
+    SketchCache,
+    init_sketch_cache,
+    sketch_decode_attend,
+    update_sketch_cache,
+)
+from repro.models.common import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg: ModelConfig):
+    H, Hkv, Dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * Dh)),
+        "wk": dense_init(ks[1], (D, Hkv * Dh)),
+        "wv": dense_init(ks[2], (D, Hkv * Dh)),
+        "wo": dense_init(ks[3], (H * Dh, D)),
+        "norm": jnp.zeros((D,), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+    return p
+
+
+def _qkv(p, h, cfg: ModelConfig, sin, cos):
+    B, S, D = h.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def attn_forward(
+    p, h: jax.Array, cfg: ModelConfig, sin, cos, *,
+    window: int | None = None, q_chunk: int = 512,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, scanned over query chunks
+    so peak memory is O(B·H·q_chunk·S) instead of O(B·H·S²)."""
+    B, S, D = h.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    q, k, v = _qkv(p, h, cfg, sin, cos)
+    # head-aligned TP: shard the KV-head axis (padded if it doesn't divide)
+    # so the QKᵀ/AV contractions stay shard-local — see sharding.constrain
+    from repro.sharding import constrain
+    pol = cfg.sharding_policy
+    head_tp = "tp!" if cfg.attn_head_tp else None
+    k = constrain(k, "dp", None, head_tp, None, policy=pol)
+    v = constrain(v, "dp", None, head_tp, None, policy=pol)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    kpos = jnp.arange(S)
+
+    nq = max(S // q_chunk, 1)
+    qc = S // nq
+    qs = q.reshape(B, nq, qc, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)  # (nq,B,qc,Hkv,G,Dh)
+    qs = constrain(qs, None, "dp", None, head_tp, None, None, policy=pol)
+
+    @jax.checkpoint  # backward recomputes the (·,qc,S) logits: the chunk scan
+    def body(i, qblk):  # must not stack per-chunk score residuals (O(S²))
+        qpos = i * qc + jnp.arange(qc)
+        logits = jnp.einsum(
+            "bqhgd,bshd->bhgqs", qblk.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        o = jnp.einsum(
+            "bhgqs,bshd->bqhgd", jax.nn.softmax(logits, axis=-1), v.astype(jnp.float32)
+        )
+        return o.astype(h.dtype)
+
+    out = jax.lax.map(lambda args: body(*args), (jnp.arange(nq), qs))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H * Dh)
+    return out @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# Decode: exact KV cache
+# --------------------------------------------------------------------------- #
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, Hkv, Dh)
+    v: jax.Array  # (B, S_max, Hkv, Dh)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+
+def attn_decode(
+    p, h_t: jax.Array, cache: KVCache, pos: jax.Array, cfg: ModelConfig,
+    sin_t, cos_t, *, write_pos: jax.Array | None = None,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode. h_t: (B, 1, D); pos: scalar current absolute index.
+
+    `write_pos` defaults to pos; a ring-buffer (sliding-window) cache passes
+    pos % window. Validity mask: slot s is valid iff s <= pos (for a full
+    cache) — for a ring buffer once pos >= S_cache-1 every slot is valid,
+    which the same comparison yields since pos keeps growing."""
+    B = h_t.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    if write_pos is None:
+        write_pos = pos
+    q, k, v = _qkv(p, h_t, cfg, sin_t, cos_t)                       # (B,1,·,Dh)
+    cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, write_pos, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, write_pos, 0, 0)),
+    )
+    S = cache.k.shape[1]
+    kpos = jnp.arange(S)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    qg = q.reshape(B, Hkv, G, Dh)
+    logits = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(jnp.float32), cache.k.astype(jnp.float32)
+    ) * scale
+    mask = kpos <= pos
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    o = jnp.einsum(
+        "bhgs,bshd->bhgd", jax.nn.softmax(logits, axis=-1), cache.v.astype(jnp.float32)
+    )
+    out = o.reshape(B, 1, H * Dh).astype(h_t.dtype) @ p["wo"]
+    return out, cache
+
+
+# --------------------------------------------------------------------------- #
+# Decode: sketched (compressed) cache — the paper's technique in serving
+# --------------------------------------------------------------------------- #
+
+def init_attn_sketch_cache(cfg: ModelConfig, batch: int, dtype) -> SketchCache:
+    return init_sketch_cache(
+        batch, cfg.n_kv_heads, cfg.sketch_attn.d_slots, cfg.head_dim, dtype
+    )
+
+
+def attn_decode_sketched(
+    p, h_t: jax.Array, cache: SketchCache, cfg: ModelConfig,
+    sin_t, cos_t, slots: jax.Array,
+) -> tuple[jax.Array, SketchCache]:
+    """One-token decode over the AccumSketch-compressed cache: O(d_slots) per
+    token and O(d_slots·Dh) memory regardless of context length."""
+    B = h_t.shape[0]
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q, k, v = _qkv(p, h_t, cfg, sin_t, cos_t)
+    cache = update_sketch_cache(cache, k[:, 0], v[:, 0], slots)
+    o = sketch_decode_attend(q[:, 0].reshape(B, H, Dh), cache)
+    out = o.reshape(B, 1, H * Dh).astype(h_t.dtype) @ p["wo"]
+    return out, cache

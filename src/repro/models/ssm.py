@@ -1,0 +1,160 @@
+"""Mamba-2 block (SSD — state space dual), chunked-parallel training form and
+single-step recurrent decode form. Follows the minimal-SSD formulation:
+
+  h_t = exp(dt_t·A) h_{t-1} + dt_t · B_t ⊗ x_t ,   y_t = C_t · h_t + D ⊙ x_t
+
+Training scans over length-Q chunks (intra-chunk parallel, inter-chunk scan),
+so compute is O(L·Q) with O(L/Q) sequential steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rmsnorm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, W-1, d_conv_ch) rolling conv inputs
+    ssm: jax.Array    # (B, H, P, N) recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.d_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, H, P, N = _dims(cfg)
+    d_conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * d_inner + 2 * N + H)),
+        "conv_w": dense_init(ks[1], (s.conv_width, d_conv_ch)),
+        "conv_b": jnp.zeros((d_conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, cfg.d_model)),
+        "norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def _split_proj(p, h, cfg: ModelConfig):
+    d_inner, H, P, N = _dims(cfg)
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC, cfg: ModelConfig):
+    """Depthwise causal conv along L. xBC: (B, L, Cch)."""
+    W = cfg.ssm.conv_width
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * p["conv_w"][i].astype(xBC.dtype)
+        for i in range(W)
+    )
+    return jax.nn.silu((out + p["conv_b"].astype(xBC.dtype)).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def mamba2_forward(p, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, L, D) → (B, L, D); L must be divisible by the chunk length."""
+    B, L, D = h.shape
+    d_inner, H, P, N = _dims(cfg)
+    Q = min(cfg.ssm.chunk, L)
+    nc = L // Q
+    f32 = jnp.float32
+
+    z, xBC, dt = _split_proj(p, h, cfg)
+    xBC = _causal_conv(p, xBC, cfg)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B, L, H, P)
+    dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"])             # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+
+    # chunked SSD
+    dA = (dt * A).reshape(B, nc, Q, H)                              # (B,c,q,H) f32
+    dA_cs = jnp.cumsum(dA, axis=2)                                  # within-chunk cumsum
+    dA_sum = dA_cs[:, :, -1, :]                                     # (B,c,H)
+    xdt = (x.astype(f32) * dt[..., None]).reshape(B, nc, Q, H, P)
+    Bc = Bm.astype(f32).reshape(B, nc, Q, N)
+    Cc = Cm.astype(f32).reshape(B, nc, Q, N)
+
+    # intra-chunk (diagonal blocks): Y_ii
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]         # (B,c,i,j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                  # (B,c,i,j)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, xdt)
+
+    # chunk states and inter-chunk scan
+    decay_out = jnp.exp(dA_sum[:, :, None, :] - dA_cs)              # (B,c,j,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_out, xdt)  # (B,c,H,P,N)
+
+    def scan_body(s_prev, inp):
+        st, dec = inp                                               # (B,H,P,N), (B,H)
+        s_new = s_prev * jnp.exp(dec)[:, :, None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((B, H, P, N), f32)
+    _, s_prevs = jax.lax.scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), dA_sum.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                      # (B,c,H,P,N)
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, s_prevs, jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(B, L, H, P) + x.astype(f32) * p["D"][None, None, :, None]
+
+    y = y.reshape(B, L, d_inner)
+    gated = y * jax.nn.silu(z.astype(f32))
+    y = rmsnorm(gated.astype(h.dtype), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------------- #
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    d_inner, H, P, N = _dims(cfg)
+    W = cfg.ssm.conv_width
+    return SSMState(
+        conv=jnp.zeros((batch, W - 1, d_inner + 2 * N), dtype),
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def mamba2_decode(p, h_t: jax.Array, state: SSMState, cfg: ModelConfig):
+    """One-token recurrent step. h_t: (B, 1, D)."""
+    B = h_t.shape[0]
+    d_inner, H, P, N = _dims(cfg)
+    f32 = jnp.float32
+
+    z, xBC, dt = _split_proj(p, h_t, cfg)                           # (B,1,·)
+    window = jnp.concatenate([state.conv, xBC.astype(state.conv.dtype)], axis=1)  # (B,W,Cch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(f32), p["conv_w"].astype(f32))
+    xBC_t = jax.nn.silu(conv_out + p["conv_b"])                     # (B,Cch) f32
+    new_conv = window[:, 1:, :]
+
+    x, Bv, Cv = jnp.split(xBC_t, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B, H, P)
+    dtv = jax.nn.softplus(dt[:, 0].astype(f32) + p["dt_bias"])      # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A)                                           # (B,H)
+    s = state.ssm * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, Bv, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cv, s) + x * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    gated = y * jax.nn.silu(z.astype(f32))
+    y = rmsnorm(gated.astype(h_t.dtype), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], SSMState(new_conv, s)

@@ -1,0 +1,407 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with recurrent
+gate connections), both with exponential gating + max-stabilizer.
+
+Training uses a time scan (these are the smallest assigned configs); decode is
+the same recurrence at length 1 — O(1) state per token, so long_500k is native.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, Dv, Dk) matrix memory
+    n: jax.Array   # (B, H, Dk)
+    m: jax.Array   # (B, H) stabilizer
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (D, H * Dh)),
+        "wk": dense_init(ks[1], (D, H * Dh)),
+        "wv": dense_init(ks[2], (D, H * Dh)),
+        "wi": dense_init(ks[3], (D, H), dtype=jnp.float32),
+        "wf": dense_init(ks[4], (D, H), dtype=jnp.float32),
+        "wog": dense_init(ks[5], (D, H * Dh)),
+        "wo": dense_init(ks[6], (H * Dh, D)),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "norm": jnp.zeros((D,), jnp.float32),
+    }
+
+
+def _mlstm_gates(p, h):
+    B, L, D = h.shape
+    H = p["wi"].shape[1]
+    Dh = p["wq"].shape[1] // H
+    q = (h @ p["wq"]).reshape(B, L, H, Dh)
+    k = (h @ p["wk"]).reshape(B, L, H, Dh) / jnp.sqrt(jnp.asarray(Dh, h.dtype))
+    v = (h @ p["wv"]).reshape(B, L, H, Dh)
+    log_i = (h.astype(jnp.float32) @ p["wi"])                       # (B,L,H)
+    log_f = jax.nn.log_sigmoid(h.astype(jnp.float32) @ p["wf"] + p["f_bias"])
+    og = jax.nn.sigmoid((h @ p["wog"]).astype(jnp.float32)).reshape(B, L, H, Dh)
+    return q, k, v, log_i, log_f, og
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, log_i, log_f, og):
+    """One recurrence step; all inputs (B, H, ...) f32."""
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    C = state.C * f_p[..., None, None] + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n = state.n * f_p[..., None] + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    y = og * num / den[..., None]
+    return MLSTMState(C, n, m_new), y
+
+
+def mlstm_forward(p, h: jax.Array, cfg: ModelConfig, *, chunk: int = 64) -> jax.Array:
+    """Chunkwise-parallel mLSTM (exact, stabilized).
+
+    The per-timestep recurrence costs O(L) scan steps each carrying the
+    (B,H,Dv,Dk) matrix memory through HBM; the chunkwise form (the SSD/GLA
+    construction adapted to mLSTM's exp-gating + max-stabilizer) scans L/Q
+    chunks and handles the Q intra-chunk positions with masked GEMMs — MXU
+    work instead of carry traffic, a Q× cut of the dominant memory term
+    (EXPERIMENTS.md §Perf A4).
+
+    Stabilizer algebra: with b_τ = Σ_{s≤τ} lf_s, a_s = li_s − b_s and
+    w_τ = max(m_prev, cummax_τ(a)), every within-chunk weight collapses to
+      intra: exp(a_s − w_τ)·(q_τ·k_s)   inter: exp(m_prev − w_τ)·(q_τ·C_prev)
+    (the b_τ cancel), and the per-position stabilizer is M_τ = b_τ + w_τ —
+    bit-for-bit the running max of the sequential rule."""
+    B, L, D = h.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q, k, v, log_i, log_f, og = _mlstm_gates(p, h)
+    f32 = jnp.float32
+    Q = min(chunk, L)
+    if L % Q != 0:   # fall back to the sequential scan on ragged lengths
+        return _mlstm_forward_seq(p, h, cfg)
+    G = L // Q
+
+    def to_chunks(x, feat):  # (B, L, H[, Dh]) → (G, B, Q, H[, Dh])
+        shp = (B, G, Q, H) + ((Dh,) if feat else ())
+        return x.astype(f32).reshape(shp).transpose(1, 0, 2, 3, *range(4, 4 + feat))
+
+    qc, kc, vc = to_chunks(q, 1), to_chunks(k, 1), to_chunks(v, 1)
+    lic, lfc = to_chunks(log_i, 0), to_chunks(log_f, 0)
+    init = MLSTMState(
+        jnp.zeros((B, H, Dh, Dh), f32), jnp.zeros((B, H, Dh), f32),
+        jnp.full((B, H), -1e30, f32),
+    )
+    mask = jnp.tril(jnp.ones((Q, Q), bool))             # s ≤ τ
+
+    def body(st, x):
+        qt, kt, vt, li, lf = x                          # (B,Q,H,·)
+        b = jnp.cumsum(lf, axis=1)                      # (B,Q,H) inclusive
+        a = li - b
+        w = jnp.maximum(st.m[:, None, :], jax.lax.cummax(a, axis=1))  # (B,Q,H)
+        inter = jnp.exp(st.m[:, None, :] - w)           # (B,Q,H)
+        src = jnp.exp(a[:, None, :, :] - w[:, :, None, :])            # (B,τ,s,H)
+        src = jnp.where(mask[None, :, :, None], src, 0.0)
+        scores = jnp.einsum("bqhd,bshd->bqsh", qt, kt) * src
+        num = (jnp.einsum("bqsh,bshd->bqhd", scores, vt)
+               + inter[..., None] * jnp.einsum("bqhd,bhvd->bqhv", qt, st.C))
+        den = (jnp.sum(scores, axis=2)
+               + inter * jnp.einsum("bqhd,bhd->bqh", qt, st.n))
+        guard = jnp.exp(-(b + w))                       # exp(−M_τ)
+        y = num / jnp.maximum(jnp.abs(den), guard)[..., None]
+        # chunk-end state update (τ = Q)
+        wQ = w[:, -1]                                   # (B,H)
+        dec = jnp.exp(st.m - wQ)
+        upd = jnp.exp(a - wQ[:, None, :])               # (B,Q,H)
+        C = st.C * dec[..., None, None] + jnp.einsum("bqhv,bqhd,bqh->bhvd", vt, kt, upd)
+        n = st.n * dec[..., None] + jnp.einsum("bqhd,bqh->bhd", kt, upd)
+        m_new = b[:, -1] + wQ
+        return MLSTMState(C, n, m_new), y
+
+    _, ys = jax.lax.scan(body, init, (qc, kc, vc, lic, lfc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H * Dh)
+    y = (og.reshape(B, L, H, Dh) * y.reshape(B, L, H, Dh)).reshape(B, L, H * Dh)
+    return y.astype(h.dtype) @ p["wo"]
+
+
+def _mlstm_forward_seq(p, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequential reference recurrence (oracle for the chunkwise path)."""
+    B, L, D = h.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q, k, v, log_i, log_f, og = _mlstm_gates(p, h)
+    f32 = jnp.float32
+    xs = (
+        q.astype(f32).transpose(1, 0, 2, 3), k.astype(f32).transpose(1, 0, 2, 3),
+        v.astype(f32).transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2), og.transpose(1, 0, 2, 3),
+    )
+    init = MLSTMState(
+        jnp.zeros((B, H, Dh, Dh), f32), jnp.zeros((B, H, Dh), f32),
+        jnp.full((B, H), -1e30, f32),
+    )
+
+    def body(st, x):
+        st, y = _mlstm_step(st, *x)
+        return st, y
+
+    _, ys = jax.lax.scan(body, init, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, H * Dh)
+    return y.astype(h.dtype) @ p["wo"]
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H, Dh = cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+    return MLSTMState(
+        jnp.zeros((batch, H, Dh, Dh), f32), jnp.zeros((batch, H, Dh), f32),
+        jnp.full((batch, H), -1e30, f32),
+    )
+
+
+def mlstm_decode(p, h_t: jax.Array, state: MLSTMState, cfg: ModelConfig):
+    q, k, v, log_i, log_f, og = _mlstm_gates(p, h_t)                # L = 1
+    f32 = jnp.float32
+    state, y = _mlstm_step(
+        state, q[:, 0].astype(f32), k[:, 0].astype(f32), v[:, 0].astype(f32),
+        log_i[:, 0], log_f[:, 0], og[:, 0],
+    )
+    B = h_t.shape[0]
+    y = y.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return y.astype(h_t.dtype) @ p["wo"], state
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, Dh)
+    n: jax.Array
+    hst: jax.Array
+    m: jax.Array
+
+
+def init_slstm(key, cfg: ModelConfig):
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 9)
+    p = {
+        "wz": dense_init(ks[0], (D, H * Dh)),
+        "wi": dense_init(ks[1], (D, H * Dh), dtype=jnp.float32),
+        "wf": dense_init(ks[2], (D, H * Dh), dtype=jnp.float32),
+        "wog": dense_init(ks[3], (D, H * Dh)),
+        "rz": dense_init(ks[4], (H, Dh, Dh), in_axis=1, dtype=jnp.float32),
+        "ri": dense_init(ks[5], (H, Dh, Dh), in_axis=1, dtype=jnp.float32),
+        "rf": dense_init(ks[6], (H, Dh, Dh), in_axis=1, dtype=jnp.float32),
+        "rog": dense_init(ks[7], (H, Dh, Dh), in_axis=1, dtype=jnp.float32),
+        "wo": dense_init(ks[8], (H * Dh, D)),
+        "f_bias": jnp.full((H * Dh,), 3.0, jnp.float32),
+        "norm": jnp.zeros((D,), jnp.float32),
+    }
+    return p
+
+
+def _slstm_step(p, state: SLSTMState, xz, xi, xf, xog, H, Dh):
+    """xz/xi/xf/xog: (B, H·Dh) pre-activations from the input; recurrence adds
+    per-head R h_{t-1}."""
+    B = xz.shape[0]
+    hprev = state.hst                                               # (B,H,Dh)
+    rec = lambda R: jnp.einsum("bhd,hde->bhe", hprev, R).reshape(B, H * Dh)
+    z = jnp.tanh(xz + rec(p["rz"]))
+    log_i = xi + rec(p["ri"])
+    log_f = jax.nn.log_sigmoid(xf + rec(p["rf"]) + p["f_bias"])
+    o = jax.nn.sigmoid(xog + rec(p["rog"]))
+    z = z.reshape(B, H, Dh)
+    log_i = log_i.reshape(B, H, Dh)
+    log_f = log_f.reshape(B, H, Dh)
+    o = o.reshape(B, H, Dh)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    c = f_p * state.c + i_p * z
+    n = jnp.maximum(f_p * state.n + i_p, jnp.exp(-m_new))
+    hnew = o * c / n
+    return SLSTMState(c, n, hnew, m_new), hnew
+
+
+def slstm_forward(p, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, L, D = h.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+    xz = (h @ p["wz"]).astype(f32).transpose(1, 0, 2)
+    xi = (h.astype(f32) @ p["wi"]).transpose(1, 0, 2)
+    xf = (h.astype(f32) @ p["wf"]).transpose(1, 0, 2)
+    xog = (h @ p["wog"]).astype(f32).transpose(1, 0, 2)
+    R = (p["rz"], p["ri"], p["rf"], p["rog"])
+    ys = _slstm_scan(R, p["f_bias"], xz, xi, xf, xog)       # (L, B, H, Dh)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, H * Dh)
+    return y.astype(h.dtype) @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM time scan with a one-GEMM weight-gradient backward.
+#
+# Why custom_vjp: under data parallelism the naive autodiff of the scan
+# accumulates dL/dR (R replicated, batch sharded) in the backward carry — SPMD
+# must materialize the replicated accumulator every step, i.e. one tuple
+# all-reduce of (H,Dh,Dh)×4 PER TIMESTEP (measured: 96% of all collective
+# bytes on the 16×16 mesh for xlstm-125m/train_4k). Here the backward scan
+# instead EMITS the per-step pre-activation gradients as stacked outputs and
+# computes dR_g = Σ_t h_{t−1} ⊗ dpre_g,t as one einsum over the (L,B) axes
+# after the scan — a single large GEMM and a single all-reduce.
+#
+# The stabilizer m is stop-gradient (h is invariant to m in exact arithmetic —
+# the exp(−m) factors cancel between c and n — so its gradient paths sum to
+# zero; stopping them is the standard xLSTM treatment and removes the kink at
+# the max switch).
+# --------------------------------------------------------------------------- #
+
+def _slstm_gates(R, f_bias, xz, xi, xf, xog, hprev, H, Dh):
+    """Vectorized gate math for one step (or a whole stacked batch of steps).
+    hprev: (..., H, Dh); x*: (..., H·Dh). Returns f32 gate tensors (..., H, Dh)."""
+    Rz, Ri, Rf, Rog = R
+    rec = lambda Rm: jnp.einsum("...hd,hde->...he", hprev, Rm)
+    shp = hprev.shape
+    pre_z = xz.reshape(shp) + rec(Rz)
+    li = xi.reshape(shp) + rec(Ri)
+    pf = xf.reshape(shp) + rec(Rf) + f_bias.reshape(H, Dh)
+    pre_o = xog.reshape(shp) + rec(Rog)
+    return pre_z, li, pf, pre_o
+
+
+def _slstm_scan_fwd_core(R, f_bias, xz, xi, xf, xog):
+    """Returns ys plus the (h, c, n, m) stacks needed for the backward pass."""
+    L, B = xz.shape[0], xz.shape[1]
+    H, Dh = R[0].shape[0], R[0].shape[1]
+    f32 = jnp.float32
+    init = SLSTMState(
+        jnp.zeros((B, H, Dh), f32), jnp.zeros((B, H, Dh), f32),
+        jnp.zeros((B, H, Dh), f32), jnp.full((B, H, Dh), -1e30, f32),
+    )
+
+    def body(st, x):
+        xz_t, xi_t, xf_t, xog_t = x
+        pre_z, li, pf, pre_o = _slstm_gates(
+            R, f_bias, xz_t, xi_t, xf_t, xog_t, st.hst, H, Dh)
+        z = jnp.tanh(pre_z)
+        lf = jax.nn.log_sigmoid(pf)
+        m_new = jax.lax.stop_gradient(jnp.maximum(lf + st.m, li))
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + st.m - m_new)
+        c = f_p * st.c + i_p * z
+        n = jnp.maximum(f_p * st.n + i_p, jnp.exp(-m_new))
+        o = jax.nn.sigmoid(pre_o)
+        hnew = o * c / n
+        new = SLSTMState(c, n, hnew, m_new)
+        return new, (hnew, c, n, m_new)
+
+    _, (hs, cs, ns, ms) = jax.lax.scan(body, init, (xz, xi, xf, xog))
+    return hs, cs, ns, ms
+
+
+@jax.custom_vjp
+def _slstm_scan(R, f_bias, xz, xi, xf, xog):
+    hs, _, _, _ = _slstm_scan_fwd_core(R, f_bias, xz, xi, xf, xog)
+    return hs
+
+
+def _slstm_scan_fwd(R, f_bias, xz, xi, xf, xog):
+    hs, cs, ns, ms = _slstm_scan_fwd_core(R, f_bias, xz, xi, xf, xog)
+    return hs, (R, f_bias, xz, xi, xf, xog, hs, cs, ns, ms)
+
+
+def _slstm_scan_bwd(res, g_hs):
+    R, f_bias, xz, xi, xf, xog, hs, cs, ns, ms = res
+    Rz, Ri, Rf, Rog = R
+    L, B = xz.shape[0], xz.shape[1]
+    H, Dh = Rz.shape[0], Rz.shape[1]
+    f32 = jnp.float32
+
+    shift = lambda s, fill: jnp.concatenate(
+        [jnp.full_like(s[:1], fill), s[:-1]], axis=0)
+    h_prev = shift(hs, 0.0)
+    c_prev = shift(cs, 0.0)
+    n_prev = shift(ns, 0.0)
+    m_prev = shift(ms, -1e30)
+
+    # recompute the gates for every step at once (vectorized — no recurrence:
+    # everything depends only on the saved h/m stacks)
+    pre_z, li, pf, pre_o = _slstm_gates(R, f_bias, xz, xi, xf, xog, h_prev, H, Dh)
+    z = jnp.tanh(pre_z)
+    lf = jax.nn.log_sigmoid(pf)
+    i_p = jnp.exp(li - ms)
+    f_p = jnp.exp(lf + m_prev - ms)
+    o = jax.nn.sigmoid(pre_o)
+    sw = (f_p * n_prev + i_p >= jnp.exp(-ms)).astype(f32)   # n max switch
+
+    def body(carry, x):
+        gh_in, gc_in, gn_in = carry
+        (gy, z_t, ip_t, fp_t, lf_t, o_t, c_t, n_t, cprev_t, nprev_t, sw_t) = x
+        gh = gy + gh_in
+        go = gh * c_t / n_t
+        dpre_o = go * o_t * (1.0 - o_t)
+        gc = gh * o_t / n_t + gc_in
+        gn = -gh * o_t * c_t / (n_t * n_t) + gn_in
+        dz = gc * ip_t
+        dpre_z = dz * (1.0 - z_t * z_t)
+        dip = gc * z_t + gn * sw_t
+        dfp = gc * cprev_t + gn * sw_t * nprev_t
+        dli = dip * ip_t                       # ∂ip/∂li = ip (m stop-grad)
+        dlf = dfp * fp_t
+        dpf = dlf * (1.0 - jnp.exp(lf_t))      # ∂log_sigmoid = σ(−pf) = 1−e^{lf}
+        # flow into h_{t−1} through the four recurrent matrices
+        recT = lambda d, Rm: jnp.einsum("bhe,hde->bhd", d, Rm)
+        gh_prev = (recT(dpre_z, Rz) + recT(dli, Ri)
+                   + recT(dpf, Rf) + recT(dpre_o, Rog))
+        gc_prev = gc * fp_t
+        gn_prev = gn * sw_t * fp_t
+        return (gh_prev, gc_prev, gn_prev), (dpre_z, dli, dpf, dpre_o)
+
+    zeros = jnp.zeros((B, H, Dh), f32)
+    xs = (g_hs, z, i_p, f_p, lf, o, cs, ns, c_prev, n_prev, sw)
+    xs_rev = jax.tree_util.tree_map(lambda a: a[::-1], xs)
+    _, d_rev = jax.lax.scan(body, (zeros, zeros, zeros), xs_rev)
+    dpre_z, dli, dpf, dpre_o = jax.tree_util.tree_map(lambda a: a[::-1], d_rev)
+
+    # the whole point: dR as ONE einsum over (L, B) — a single all-reduce
+    # under data parallelism instead of one per timestep
+    dR = tuple(
+        jnp.einsum("lbhd,lbhe->hde", h_prev, d)
+        for d in (dpre_z, dli, dpf, dpre_o)
+    )
+    d_fbias = jnp.sum(dpf, axis=(0, 1)).reshape(H * Dh)
+    flat = lambda d: d.reshape(L, B, H * Dh)
+    return dR, d_fbias, flat(dpre_z), flat(dli), flat(dpf), flat(dpre_o)
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    H, Dh = cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+    z = jnp.zeros((batch, H, Dh), f32)
+    return SLSTMState(z, z, z, jnp.full((batch, H, Dh), -1e30, f32))
+
+
+def slstm_decode(p, h_t: jax.Array, state: SLSTMState, cfg: ModelConfig):
+    B = h_t.shape[0]
+    H, Dh = cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+    x = h_t[:, 0]
+    state, y = _slstm_step(
+        p, state, (x @ p["wz"]).astype(f32), x.astype(f32) @ p["wi"],
+        x.astype(f32) @ p["wf"], (x @ p["wog"]).astype(f32), H, Dh,
+    )
+    y = y.reshape(B, 1, H * Dh)
+    return y.astype(h_t.dtype) @ p["wo"], state

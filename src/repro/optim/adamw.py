@@ -1,0 +1,107 @@
+"""AdamW with f32 master copies, global-norm clipping, and cosine schedule.
+
+Pure-pytree implementation (no optax in this environment). Optimizer state is
+optionally ZeRO-1 partitioned: the sharding rules in `repro/sharding.py` place
+`m`, `v`, and `master` on the combined (pod, data, model) axes so per-chip
+optimizer bytes scale 1/N_chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # scalar int32
+    m: PyTree            # f32, like params
+    v: PyTree            # f32
+    master: PyTree       # f32 master weights
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to lr_min."""
+    step_f = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step_f / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step_f - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step_f < cfg.warmup_steps, warm, cos)
+
+
+def init_adamw(params: PyTree) -> AdamWState:
+    f32 = lambda t: jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    # copy=True: f32 params (norm scales) must not alias the master buffer
+    # (aliasing breaks buffer donation in the jitted train step)
+    master = jax.tree_util.tree_map(lambda x: jnp.array(x, jnp.float32, copy=True), params)
+    return AdamWState(jnp.zeros((), jnp.int32), f32(params), f32(params), master)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+        + 1e-30
+    )
+
+
+def _decay_mask(path: tuple, x: jax.Array) -> bool:
+    """No weight decay on norms/biases/scalars."""
+    name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    return x.ndim >= 2 and "norm" not in name and "bias" not in name.lower()
+
+
+def adamw_update(
+    grads: PyTree, state: AdamWState, cfg: AdamWConfig, param_dtype=jnp.bfloat16
+) -> tuple[PyTree, AdamWState, dict]:
+    """Returns (new params cast to param_dtype, new state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if _decay_mask(path, w):
+            u = u + cfg.weight_decay * w
+        return m, v, w - lr * u
+
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree_util.tree_structure(grads)
+    ms = jax.tree_util.tree_leaves(state.m)
+    vs = jax.tree_util.tree_leaves(state.v)
+    ws = jax.tree_util.tree_leaves(state.master)
+    out = [upd(p, g, m, v, w) for (p, g), m, v, w in zip(flat, ms, vs, ws)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_w = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree_util.tree_map(lambda x: x.astype(param_dtype), new_w)
+    # norm params stay f32 (they are stored f32 in the model)
+    new_params = jax.tree_util.tree_map(
+        lambda p, w: w if p.dtype == jnp.float32 else p, new_params, new_w
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v, new_w), metrics

@@ -1,0 +1,85 @@
+"""Serving engine: batched prefill + decode with exact or AccumSketch caches.
+
+The sketched cache (paper technique) makes per-request memory independent of
+context length — the long_500k production shape decodes against d_slots
+landmark slots instead of a 500k-entry KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.sketched_attention import decode_slots
+from repro.models.model import DecodeCache, decode_step, init_cache
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    use_sketch: bool = False
+    temperature: float = 0.0        # 0 → greedy
+    seed: int = 0
+
+
+class Engine:
+    """Single-host engine; the sharded variant jits with in_shardings from
+    repro.sharding (see launch/serve.py)."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, sc: ServeConfig):
+        self.cfg, self.params, self.sc = cfg, params, sc
+        self.key = jax.random.PRNGKey(sc.seed)
+        self._step = jax.jit(
+            lambda p, c, t, i, s: decode_step(
+                p, c, t, i, cfg, slots=s, use_sketch=sc.use_sketch
+            )
+        )
+
+    def new_cache(self, batch: int) -> DecodeCache:
+        return init_cache(
+            self.cfg, batch, self.sc.max_len, use_sketch=self.sc.use_sketch
+        )
+
+    def _slots(self, pos: int) -> jax.Array:
+        sa = self.cfg.sketch_attn
+        return decode_slots(self.key, pos, sa.d_slots, sa.m_r)
+
+    def prefill_tokens(self, cache: DecodeCache, prompts: np.ndarray) -> tuple[DecodeCache, jax.Array]:
+        """Sequential decode-mode prefill (token by token) — exercises the same
+        cache path the decoder uses. prompts: (B, L)."""
+        logits = None
+        for t in range(prompts.shape[1]):
+            logits, cache = self._step(
+                self.params, cache, jnp.asarray(prompts[:, t]), jnp.int32(t),
+                self._slots(t),
+            )
+        return cache, logits
+
+    def generate(
+        self, prompts: np.ndarray, n_new: int
+    ) -> tuple[np.ndarray, DecodeCache]:
+        B, L = prompts.shape
+        cache = self.new_cache(B)
+        cache, logits = self.prefill_tokens(cache, prompts)
+        out = []
+        tok = self._sample(logits, L)
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            pos = L + i
+            logits, cache = self._step(
+                self.params, cache, tok, jnp.int32(pos), self._slots(pos)
+            )
+            tok = self._sample(logits, pos + 1)
+        return np.stack(out, axis=1), cache
+
+    def _sample(self, logits: jax.Array, pos: int) -> jax.Array:
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(self.key, pos)
+        return jax.random.categorical(k, logits / self.sc.temperature).astype(jnp.int32)

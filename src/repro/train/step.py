@@ -1,0 +1,100 @@
+"""train_step: loss → grads → (optional sketched compression) → AdamW.
+
+Microbatch gradient accumulation via lax.scan keeps per-step activation peak
+at 1/n_micro; remat policy is a config knob. Inside pjit the DP reduction is
+implicit in the sharded mean loss — no explicit psum needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.optim.compress import CompressConfig, compress_grads, init_error_feedback
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    n_micro: int = 1
+    remat: str = "full"               # none|dots|full — "full" keeps the scan
+                                      # carry as the only cross-layer residual
+    q_chunk: int = 512
+    compress: CompressConfig | None = None
+    seed: int = 0
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+    ef: PyTree | None                 # error-feedback buffers (compression)
+
+
+def init_train_state(params: PyTree, tc: TrainConfig) -> TrainState:
+    ef = None
+    if tc.compress is not None:
+        ef = init_error_feedback(params, tc.compress)
+    return TrainState(params, init_adamw(params), ef)
+
+
+def _grads(params, tokens, labels, cond, cfg: ModelConfig, tc: TrainConfig):
+    def lf(p, t, l, c):
+        loss, mets = loss_fn(p, t, l, cfg, cond=c, q_chunk=tc.q_chunk, remat=tc.remat)
+        return loss, mets
+
+    if tc.n_micro == 1:
+        (loss, mets), grads = jax.value_and_grad(lf, has_aux=True)(
+            params, tokens, labels, cond
+        )
+        return loss, mets, grads
+
+    B = tokens.shape[0]
+    mb = B // tc.n_micro
+    tk = tokens.reshape(tc.n_micro, mb, *tokens.shape[1:])
+    lb = labels.reshape(tc.n_micro, mb, *labels.shape[1:])
+    cd = (
+        cond.reshape(tc.n_micro, mb, *cond.shape[1:]) if cond is not None else None
+    )
+
+    def body(carry, xs):
+        acc, loss_acc = carry
+        t, l = xs[0], xs[1]
+        c = xs[2] if cond is not None else None
+        (loss, mets), g = jax.value_and_grad(lf, has_aux=True)(params, t, l, c)
+        acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32) / tc.n_micro, acc, g
+        )
+        return (acc, loss_acc + loss / tc.n_micro), mets
+
+    zero = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params
+    )
+    xs = (tk, lb, cd) if cond is not None else (tk, lb)
+    (grads, loss), mets = jax.lax.scan(body, (zero, jnp.zeros((), jnp.float32)), xs)
+    mets = jax.tree_util.tree_map(lambda x: x[-1], mets)
+    return loss, mets, grads
+
+
+def train_step(
+    state: TrainState, tokens: jax.Array, labels: jax.Array, step: jax.Array,
+    cfg: ModelConfig, tc: TrainConfig, *, cond: jax.Array | None = None,
+) -> tuple[TrainState, dict]:
+    loss, mets, grads = _grads(state.params, tokens, labels, cond, cfg, tc)
+
+    ef = state.ef
+    if tc.compress is not None:
+        grads, ef, cmets = compress_grads(
+            grads, ef, step, jax.random.PRNGKey(tc.seed), tc.compress
+        )
+        mets = {**mets, **cmets}
+
+    new_params, new_opt, omets = adamw_update(grads, state.opt, tc.optimizer)
+    metrics = {"loss": loss, **mets, **omets}
+    return TrainState(new_params, new_opt, ef), metrics

@@ -1,0 +1,109 @@
+"""AMM extension + sketched attention (the paper's technique in the LM)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import amm, amm_error, make_accum_sketch
+from repro.core.sketched_attention import (
+    accum_attention,
+    decode_slots,
+    exact_attention,
+    init_sketch_cache,
+    make_seq_sketch,
+    sketch_decode_attend,
+    update_sketch_cache,
+)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def test_amm_unbiased_and_converges():
+    n, p, q = 256, 8, 6
+    A = jax.random.normal(KEY, (n, p))
+    B = jax.random.normal(jax.random.fold_in(KEY, 1), (n, q))
+    exact = np.asarray(A.T @ B)
+    # unbiasedness: average of many sketched products ≈ exact
+    acc = np.zeros_like(exact)
+    reps = 200
+    for r in range(reps):
+        sk = make_accum_sketch(jax.random.fold_in(KEY, 10 + r), n, 64, 2)
+        acc += np.asarray(amm(A, B, sk))
+    rel = np.linalg.norm(acc / reps - exact) / np.linalg.norm(exact)
+    assert rel < 0.2, rel   # MC noise ~ O(1/√reps)
+    # error decreases with d
+    e_small = np.mean([float(amm_error(A, B, make_accum_sketch(jax.random.fold_in(KEY, 500 + r), n, 16, 2))) for r in range(10)])
+    e_big = np.mean([float(amm_error(A, B, make_accum_sketch(jax.random.fold_in(KEY, 900 + r), n, 128, 2))) for r in range(10)])
+    assert e_big < e_small
+
+
+def test_accum_attention_error_decreases_with_m():
+    B, H, S, Dh = 2, 2, 128, 32
+    ks = jax.random.split(KEY, 3)
+    # correlated keys → landmark attention meaningful
+    base = jax.random.normal(ks[0], (B, H, 8, Dh))
+    k = jnp.repeat(base, S // 8, axis=2) + 0.1 * jax.random.normal(ks[1], (B, H, S, Dh))
+    q = k + 0.1 * jax.random.normal(ks[2], (B, H, S, Dh))
+    v = jax.random.normal(ks[1], (B, H, S, Dh))
+    ex = exact_attention(q, k, v)
+    errs = {}
+    for m in [1, 8]:
+        es = []
+        for r in range(4):
+            sk = make_seq_sketch(jax.random.fold_in(KEY, 100 * m + r), S, 32, m)
+            es.append(float(jnp.mean((accum_attention(q, k, v, sk) - ex) ** 2)))
+        errs[m] = np.mean(es)
+    assert errs[8] < errs[1], errs
+
+
+def test_sketch_cache_exact_when_slots_exceed_tokens():
+    """Singleton slots ⇒ the compressed decode equals exact attention."""
+    B, Hkv, Dh, T = 2, 2, 16, 6
+    d_slots = 32
+    cache = init_sketch_cache(B, Hkv, d_slots, Dh)
+    ks = jax.random.split(KEY, T)
+    keys, vals = [], []
+    for t in range(T):
+        k_t = jax.random.normal(ks[t], (B, Hkv, Dh))
+        v_t = jax.random.normal(jax.random.fold_in(ks[t], 9), (B, Hkv, Dh))
+        keys.append(k_t)
+        vals.append(v_t)
+        cache = update_sketch_cache(cache, k_t, v_t, jnp.asarray([t]))  # singleton slots
+    q = jax.random.normal(jax.random.fold_in(KEY, 77), (B, Hkv, Dh))
+    out = sketch_decode_attend(q, cache)
+    K = jnp.stack(keys, 2)
+    V = jnp.stack(vals, 2)
+    ref = exact_attention(q[:, :, None, :], K, V)[:, :, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_sketch_cache_streaming_matches_batch_masses():
+    """Slot masses after streaming T tokens ≈ T·m_r/√m_r · 1/d per slot."""
+    B, Hkv, Dh, T, d_slots, m_r = 1, 1, 8, 512, 64, 2
+    cache = init_sketch_cache(B, Hkv, d_slots, Dh)
+    key = jax.random.PRNGKey(0)
+    for t in range(T):
+        k_t = jnp.ones((B, Hkv, Dh))
+        cache = update_sketch_cache(
+            cache, k_t, k_t, decode_slots(key, t, d_slots, m_r)
+        )
+    mass = np.asarray(cache.mass)[0, 0]
+    expected = T * m_r / np.sqrt(m_r) / d_slots
+    assert abs(mass.mean() - expected) / expected < 0.05
+    assert mass.min() > 0  # every slot touched at T·m_r ≫ d_slots
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(16, 64), d=st.integers(4, 16), m=st.integers(1, 4),
+       seed=st.integers(0, 999))
+def test_accum_attention_rowstochastic(s, d, m, seed):
+    """Property: sketched attention output stays in conv-hull scale of V."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 1, s, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, s, 8))
+    v = jnp.ones((1, 1, s, 8))
+    sk = make_seq_sketch(jax.random.fold_in(key, 2), s, d, m)
+    out = accum_attention(q, k, v, sk)
+    # exact attention with v=1 gives exactly 1; sketched ≈ 1
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.mean(jnp.abs(out - 1.0))) < 0.5

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (spec deliverable f): a REDUCED config of the
+same family runs one forward/train step on CPU, asserting output shapes and
+no NaNs; plus decode-vs-forward consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import decode_step, forward, init_cache, init_params, output_embedding
+from repro.models.model import loss_fn, param_count
+
+KEY = jax.random.PRNGKey(0)
+ARCH_IDS = list(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = reduced(ARCHS[name])
+            cache[name] = (cfg, init_params(KEY, cfg))
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch, built):
+    cfg, params = built(arch)
+    B, S = 2, 32
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.fold_in(KEY, 1), (B, S), 0, cfg.vocab_size)
+    cond = (
+        jax.random.normal(KEY, (B, cfg.cond_len, cfg.d_model), jnp.bfloat16)
+        if cfg.frontend else None
+    )
+    (loss, mets), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, toks, labels, cfg, cond=cond), has_aux=True
+    )(params)
+    assert bool(jnp.isfinite(loss)), arch
+    assert 3.0 < float(loss) < 12.0    # ~log(vocab) at init
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(x.astype(jnp.float32)))) for x in leaves)
+    h, _ = forward(params, toks, cfg, cond=cond, remat="none")
+    S_tot = S + (cfg.cond_len if cfg.frontend else 0)
+    assert h.shape == (B, S_tot, cfg.d_model)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch, built):
+    cfg, params = built(arch)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    h, _ = forward(params, toks, cfg, remat="none")
+    emb = output_embedding(params)
+    ref = h.astype(jnp.float32) @ emb.T.astype(jnp.float32)
+    cache = init_cache(cfg, B, S)
+    worst = 0.0
+    for t in range(S):
+        lg, cache = decode_step(params, cache, toks[:, t], jnp.int32(t), cfg)
+        worst = max(worst, float(jnp.max(jnp.abs(lg - ref[:, t]))))
+    # attention archs are exact; SSM/recurrent differ by chunked-vs-recurrent
+    # bf16 accumulation order
+    tol = 0.05 if any(k in ("mamba2", "mlstm", "slstm") for k in cfg.pattern) else 1e-3
+    assert worst < tol, (arch, worst)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "zamba2-7b", "gemma3-12b"])
+def test_sketched_decode_runs(arch, built):
+    """The paper-technique cache path (long-context serving) stays finite."""
+    cfg, params = built(arch)
+    B = 2
+    cache = init_cache(cfg, B, 64, use_sketch=True)
+    tok = jnp.zeros((B,), jnp.int32)
+    slots = jnp.asarray([0, 1], jnp.int32)
+    for t in range(4):
+        lg, cache = decode_step(
+            params, cache, tok, jnp.int32(t), cfg, slots=slots, use_sketch=True
+        )
+        assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_full_configs_match_spec():
+    """The production configs carry the exact assigned hyperparameters."""
+    spec = {
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    }
+    for name, (L, D, H, KV, FF, V) in spec.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+            L, D, H, KV, FF, V
+        ), name
+    assert get_config("moonshot-v1-16b-a3b").moe.n_experts == 64
+    assert get_config("moonshot-v1-16b-a3b").moe.top_k == 6
+    assert get_config("arctic-480b").moe.n_experts == 128
+    assert get_config("arctic-480b").moe.top_k == 2
+    assert get_config("arctic-480b").moe.dense_residual
+    assert get_config("zamba2-7b").ssm.d_state == 64
+    assert get_config("qwen1.5-110b").qkv_bias and get_config("qwen2-vl-2b").qkv_bias
+
+
+def test_moe_capacity_drops_reported():
+    from repro.models.moe import init_moe, moe_forward
+    from repro.configs.base import MoECfg
+
+    moe = MoECfg(n_experts=4, top_k=2, d_ff_expert=16, capacity_factor=1.0)
+    p = init_moe(KEY, 32, moe)
+    x = jax.random.normal(KEY, (2, 16, 32), jnp.bfloat16)
+    out, mets = moe_forward(p, x, moe)
+    assert out.shape == x.shape
+    assert 0.0 <= float(mets.dropped_fraction) < 1.0
+    assert float(mets.aux_loss) > 0.5       # ≈1 for balanced routing

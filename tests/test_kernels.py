@@ -1,0 +1,67 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (shapes × dtypes),
+as required for every Pallas kernel. interpret=True executes on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sketch import make_accum_sketch
+from repro.core.sketched_attention import accum_attention, make_seq_sketch
+from repro.kernels.accum_apply.ops import sketch_right_kernel
+from repro.kernels.accum_apply.ref import accum_apply_ref
+from repro.kernels.landmark_attention.kernel import landmark_attention
+from repro.kernels.landmark_attention.ops import accum_attention_kernel
+from repro.kernels.landmark_attention.ref import landmark_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "R,N,d,m", [(128, 256, 8, 1), (256, 512, 32, 4), (128, 1024, 16, 8), (256, 256, 64, 2)]
+)
+def test_accum_apply_sweep(R, N, d, m, dtype):
+    K = jax.random.normal(KEY, (R, N), dtype)
+    sk = make_accum_sketch(jax.random.fold_in(KEY, d * m), N, d, m)
+    ref = accum_apply_ref(K, sk.indices, sk.coef.astype(jnp.float32))
+    out = sketch_right_kernel(K, sk, bm=128, bd=min(8, d))
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_accum_apply_wide_K_chunked():
+    """N > MAX_COLS path: chunked partial products sum exactly."""
+    K = jax.random.normal(KEY, (128, 3 * 8192 // 2), jnp.float32)
+    sk = make_accum_sketch(KEY, K.shape[1], 16, 4)
+    ref = accum_apply_ref(K, sk.indices, sk.coef)
+    out = sketch_right_kernel(K, sk, bm=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,Dh,L,Dv", [(128, 32, 16, 32), (256, 64, 64, 64), (128, 128, 256, 128)])
+def test_landmark_attention_sweep(S, Dh, L, Dv, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (S, Dh), dtype)
+    kt = jax.random.normal(ks[1], (L, Dh), dtype)
+    M = jax.random.normal(ks[2], (L, Dv), dtype)
+    ref = landmark_attention_ref(q, kt, M)
+    out = landmark_attention(q, kt, M, bq=64)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_full_sketched_attention_kernel_vs_core():
+    B, H, S, Dh = 2, 3, 128, 32
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, S, Dh))
+    k = jax.random.normal(ks[1], (B, H, S, Dh))
+    v = jax.random.normal(ks[2], (B, H, S, Dh))
+    sk = make_seq_sketch(ks[3], S, 32, 4)
+    core = accum_attention(q, k, v, sk)
+    kern = accum_attention_kernel(q, k, v, sk, bq=64)
+    np.testing.assert_allclose(np.asarray(core), np.asarray(kern), rtol=1e-4, atol=1e-4)

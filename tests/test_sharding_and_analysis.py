@@ -1,0 +1,99 @@
+"""Sharding rules + HLO roofline analyzer unit tests (single device —
+divisibility fallback must replicate everything gracefully)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.analysis import HloModule, _shape_bytes, model_flops
+from repro.launch.mesh import make_debug_mesh
+from repro.sharding import batch_spec, param_spec, params_shardings
+
+
+def test_param_spec_rules():
+    mesh = make_debug_mesh(1, 1)
+    # embed: vocab→tp, d→fsdp; 1-device mesh → everything falls back to None
+    assert param_spec(mesh, "embed", (512, 64)) == P(None, None)
+
+
+def test_divisibility_fallback_never_errors():
+    mesh = make_debug_mesh(1, 1)
+    for shape in [(7, 13), (3, 5, 7), (1,), (127, 255, 3)]:
+        spec = param_spec(mesh, "blocks/pos0/attn/wq", shape)
+        assert len(spec) == len(shape)
+
+
+def test_params_shardings_cover_tree():
+    mesh = make_debug_mesh(1, 1)
+    tree = {"embed": jnp.zeros((8, 4)), "blocks": {"pos0": {"attn": {"wq": jnp.zeros((4, 4))}}}}
+    sh = params_shardings(mesh, tree)
+    assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(tree)
+
+
+def test_batch_spec():
+    mesh = make_debug_mesh(1, 1)
+    assert batch_spec(mesh, 8) == P(None, None)
+
+
+# --------------------------------------------------------------------------- #
+# HLO analyzer
+# --------------------------------------------------------------------------- #
+
+_TOY_HLO = """
+HloModule toy
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> (s32[], f32[8,8]) {
+  %arg = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%z, %arg)
+  ROOT %w0 = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_hlo_while_trip_count_multiplies_flops_and_collectives():
+    mod = HloModule(_TOY_HLO)
+    assert mod.entry == "main"
+    mult = mod.multipliers()
+    assert mult["body"] == 10.0
+    flops, hbm, coll, detail = mod.analyze()
+    # dot: 2·8·8·8 = 1024 flops × 10 trips
+    assert flops == 1024 * 10
+    # all-reduce: 8·8·4B = 256B × factor 2 × 10
+    assert coll == 256 * 2 * 10
+    assert detail["count"]["all-reduce"] == 10
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(s32[], f32[8,8])") == 4 + 256
+    assert _shape_bytes("bf16[2,3]{1,0}") == 12
+
+
+def test_model_flops():
+    assert model_flops(1000, 10, "train") == 6e4
+    assert model_flops(1000, 10, "prefill") == 2e4

@@ -1,0 +1,132 @@
+"""Unit + property tests for the core sketch construction (paper Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AccumSketch,
+    gram_sketch,
+    make_accum_sketch,
+    make_gaussian_sketch,
+    make_nystrom_sketch,
+    make_sparse_rp,
+    sketch_left,
+    sketch_right,
+    sketch_vec,
+    unsketch_mat,
+    unsketch_vec,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_shapes_and_structure():
+    sk = make_accum_sketch(KEY, n=100, d=10, m=3)
+    assert sk.indices.shape == (3, 10) and sk.signs.shape == (3, 10)
+    assert sk.m == 3 and sk.d == 10 and sk.n == 100
+    S = sk.dense()
+    assert S.shape == (100, 10)
+    # each column has at most m non-zeros (fewer on index collisions)
+    assert int(jnp.max(sk.nnz_per_column())) <= 3
+
+
+def test_column_norm_scaling():
+    """E[‖col‖²] = n/d for Algorithm-1 columns (uniform P): tr E[SSᵀ] = n and
+    the d columns are exchangeable. (Collisions subtract a little: two draws
+    hitting the same row with opposite signs cancel, hence the tolerance.)"""
+    n, d = 200, 20
+    norms = []
+    for i in range(30):
+        sk = make_accum_sketch(jax.random.fold_in(KEY, i), n=n, d=d, m=4)
+        S = sk.dense()
+        norms.append(np.asarray(jnp.sum(S**2, axis=0)))
+    mean_sq = float(np.mean(np.concatenate(norms)))
+    assert abs(mean_sq - n / d) < 0.15 * n / d
+
+
+def test_unbiasedness_E_SST_is_identity():
+    """E[S Sᵀ] = I_n — the identity making every sketch estimator unbiased."""
+    n, d, m, reps = 64, 16, 4, 400
+    acc = np.zeros((n, n))
+    for i in range(reps):
+        S = np.asarray(make_accum_sketch(jax.random.fold_in(KEY, i), n, d, m).dense())
+        acc += S @ S.T
+    acc /= reps
+    off = acc - np.eye(n)
+    assert np.abs(np.diag(off)).mean() < 0.15
+    assert np.abs(off - np.diag(np.diag(off))).max() < 0.35   # MC noise bound
+
+
+def test_nystrom_is_m1_special_case():
+    """m=1 unsigned sketch selects/rescales single columns — Nyström."""
+    sk = make_nystrom_sketch(KEY, n=50, d=5)
+    S = np.asarray(sk.dense())
+    assert ((S != 0).sum(axis=0) == 1).all()
+    assert (S[S != 0] > 0).all()        # unsigned
+
+
+def test_clt_limit_approaches_gaussian_moments():
+    """m→∞: entries approach N(0, 1/d) for uniform P (CLT) — the same
+    per-entry variance as make_gaussian_sketch. Check the variance and the
+    empirical kurtosis trending to 3 (single-term excess kurtosis is n−3,
+    divided by ~m by the CLT → ≈3.1 at m=256)."""
+    n, d = 32, 8
+    for m, kurt_tol in [(1, None), (256, 1.0)]:
+        S = np.asarray(make_accum_sketch(KEY, n, d, m).dense()).ravel()
+        var = S.var()
+        assert abs(var - 1.0 / d) < 0.3 / d
+        if kurt_tol is not None:
+            kurt = ((S - S.mean()) ** 4).mean() / var**2
+            assert abs(kurt - 3.0) < kurt_tol   # Gaussian kurtosis = 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(8, 80), d=st.integers(2, 16), m=st.integers(1, 6),
+    r=st.integers(1, 20), seed=st.integers(0, 2**20),
+)
+def test_structural_apply_equals_dense(n, d, m, r, seed):
+    """Property: the O(nmd) structural paths equal the dense matrix algebra."""
+    key = jax.random.PRNGKey(seed)
+    sk = make_accum_sketch(key, n, d, m)
+    S = sk.dense()
+    K = jax.random.normal(jax.random.fold_in(key, 1), (r, n))
+    M = jax.random.normal(jax.random.fold_in(key, 2), (n, r))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (n,))
+    w = jax.random.normal(jax.random.fold_in(key, 4), (d,))
+    np.testing.assert_allclose(sketch_right(K, sk), K @ S, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(sketch_left(sk, M), S.T @ M, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(sketch_vec(sk, v), S.T @ v, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(unsketch_vec(sk, w), S @ w, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        unsketch_mat(sk, jnp.stack([w, w], 1)), S @ np.stack([w, w], 1),
+        rtol=2e-4, atol=2e-4,
+    )
+    np.testing.assert_allclose(gram_sketch(sk), S.T @ S, rtol=2e-4, atol=2e-4)
+
+
+def test_weighted_sampling_distribution_respected():
+    probs = jnp.asarray([0.7] + [0.3 / 99] * 99)
+    sk = make_accum_sketch(KEY, n=100, d=200, m=2, probs=probs)
+    frac0 = float(jnp.mean((sk.indices == 0).astype(jnp.float32)))
+    assert 0.6 < frac0 < 0.8
+
+
+def test_baseline_sketches():
+    Sg = make_gaussian_sketch(KEY, 100, 10)
+    assert Sg.shape == (100, 10)
+    assert abs(float(jnp.var(Sg)) - 0.1) < 0.02
+    Sr = make_sparse_rp(KEY, 400, 10)
+    density = float(jnp.mean((Sr != 0).astype(jnp.float32)))
+    assert abs(density - 1 / np.sqrt(400)) < 0.03
+
+
+def test_pytree_roundtrip():
+    sk = make_accum_sketch(KEY, 30, 4, 2)
+    leaves, treedef = jax.tree_util.tree_flatten(sk)
+    sk2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(sk2, AccumSketch) and sk2.n == 30
+    out = jax.jit(lambda s: s.dense())(sk)
+    np.testing.assert_allclose(out, sk.dense())
