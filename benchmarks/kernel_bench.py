@@ -1,7 +1,17 @@
-"""Microbenchmarks: Pallas kernels (interpret mode — correctness-path timing)
-vs their XLA reference implementations, plus the structural-vs-dense sketch
-application speedup (the paper's O(nmd) claim measured)."""
+"""Microbenchmarks for the accum_apply kernel family.
+
+Times the seed scalar-gather Pallas kernel against the vectorized gather→GEMM
+rewrite, the fused (K S, SᵀK S) single-sweep kernel against the two-pass
+composition, and the structural-vs-dense sketch application (the paper's
+O(nmd) claim) — then writes the results to ``BENCH_kernels.json`` at the repo
+root so the perf trajectory is tracked across PRs.
+
+Run:  PYTHONPATH=src python -m benchmarks.run kernels
+"""
 from __future__ import annotations
+
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -9,41 +19,122 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro.core.apply import sketch_right
 from repro.core.sketch import make_accum_sketch
-from repro.kernels.accum_apply.ref import accum_apply_ref
+from repro.kernels.accum_apply.kernel import accum_apply, accum_apply_scalar
+from repro.kernels.accum_apply.ops import (
+    autotune_blocks,
+    sketch_both_kernel,
+    sketch_left_kernel,
+    sketch_right_kernel,
+)
 from repro.kernels.landmark_attention.ref import landmark_attention_ref
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_kernels.json"
 
-def main():
+# The anchor shape every PR's numbers are compared at (f32).
+ANCHOR = dict(R=4096, N=8192, d=64, m=4)
+
+
+def bench_accum_apply(results: dict) -> None:
+    """Seed scalar-loop kernel vs vectorized gather→GEMM at the anchor shape."""
     key = jax.random.PRNGKey(0)
+    R, N, d, m = ANCHOR["R"], ANCHOR["N"], ANCHOR["d"], ANCHOR["m"]
+    K = jax.random.normal(key, (R, N))
+    sk = make_accum_sketch(key, N, d, m)
+    coef = sk.coef.astype(jnp.float32)
+    bm, bd = autotune_blocks(R, N, d, m, jnp.float32)
 
-    # --- paper claim: structural K·S is O(nmd), dense K·S is O(n²d) -------- #
+    t_new = timeit(
+        lambda: accum_apply(K, sk.indices, coef, bm=bm, bd=bd, interpret=True))
+    # seed defaults: bm=256, bd=8, scalar per-column gather loop
+    t_old = timeit(
+        lambda: accum_apply_scalar(K, sk.indices, coef, bm=256, bd=8,
+                                   interpret=True), reps=2)
+    speedup = t_old / max(t_new, 1e-9)
+    tag = f"R{R}_N{N}_d{d}_m{m}_f32"
+    emit(f"accum_apply_gemm_{tag}", t_new * 1e6, f"scalar/gemm={speedup:.1f}x")
+    emit(f"accum_apply_scalar_{tag}", t_old * 1e6, "seed baseline")
+    results[f"accum_apply_gemm_{tag}"] = {
+        "us": t_new * 1e6, "speedup_vs_scalar": speedup, "blocks": [bm, bd]}
+    results[f"accum_apply_scalar_{tag}"] = {"us": t_old * 1e6}
+
+
+def bench_fused_both(results: dict) -> None:
+    """Fused single-sweep (C, W) vs the two-pass kernel composition."""
+    key = jax.random.PRNGKey(1)
+    n, d, m = 4096, ANCHOR["d"], ANCHOR["m"]
+    K = jax.random.normal(key, (n, n))
+    K = 0.5 * (K + K.T)
+    sk = make_accum_sketch(key, n, d, m)
+
+    def two_pass():
+        C = sketch_right_kernel(K, sk)
+        return C, sketch_left_kernel(sk, C)
+
+    t_fused = timeit(lambda: sketch_both_kernel(K, sk))
+    t_two = timeit(two_pass)
+    speedup = t_two / max(t_fused, 1e-9)
+    tag = f"n{n}_d{d}_m{m}_f32"
+    emit(f"sketch_both_fused_{tag}", t_fused * 1e6,
+         f"two_pass/fused={speedup:.2f}x")
+    emit(f"sketch_both_two_pass_{tag}", t_two * 1e6, "")
+    results[f"sketch_both_fused_{tag}"] = {
+        "us": t_fused * 1e6, "speedup_vs_two_pass": speedup}
+    results[f"sketch_both_two_pass_{tag}"] = {"us": t_two * 1e6}
+
+
+def bench_structural_vs_dense(results: dict) -> None:
+    """Paper claim: structural K·S is O(nmd), dense K·S is O(n²d)."""
+    key = jax.random.PRNGKey(2)
     n, d, m = 4096, 64, 4
     K = jax.random.normal(key, (n, n))
     sk = make_accum_sketch(key, n, d, m)
     S = sk.dense()
     t_struct = timeit(jax.jit(lambda K, sk: sketch_right(K, sk)), K, sk)
     t_dense = timeit(jax.jit(lambda K, S: K @ S), K, S)
+    speedup = t_dense / max(t_struct, 1e-9)
     emit("sketch_right_structural", t_struct * 1e6,
-         f"dense/structural={t_dense/max(t_struct,1e-9):.1f}x n={n} d={d} m={m}")
+         f"dense/structural={speedup:.1f}x n={n} d={d} m={m}")
     emit("sketch_right_dense", t_dense * 1e6, "")
+    results["sketch_right_structural"] = {
+        "us": t_struct * 1e6, "speedup_vs_dense": speedup}
+    results["sketch_right_dense"] = {"us": t_dense * 1e6}
 
-    # --- Pallas kernel oracle timings (XLA ref path; kernel itself runs in
-    #     interpret mode on CPU, timed in tests for correctness only) ------- #
-    t_ref = timeit(jax.jit(accum_apply_ref), K[:, :1024], sk.indices % 1024, sk.coef)
-    emit("accum_apply_ref_1024", t_ref * 1e6, "oracle path")
 
+def bench_landmark_ref(results: dict) -> None:
+    key = jax.random.PRNGKey(3)
     S_len, Dh, L = 4096, 128, 256
     q = jax.random.normal(key, (S_len, Dh))
     kt = jax.random.normal(key, (L, Dh))
     M = jax.random.normal(key, (L, Dh))
     t_lm = timeit(jax.jit(landmark_attention_ref), q, kt, M)
-    # exact attention for comparison: O(S²) vs O(S·L)
     kfull = jax.random.normal(key, (S_len, Dh))
     t_full = timeit(
-        jax.jit(lambda q, k: jax.nn.softmax(q @ k.T / Dh**0.5, axis=-1) @ k), q, kfull
-    )
+        jax.jit(lambda q, k: jax.nn.softmax(q @ k.T / Dh**0.5, axis=-1) @ k),
+        q, kfull)
     emit("landmark_attention_ref", t_lm * 1e6,
          f"exact/landmark={t_full/max(t_lm,1e-9):.1f}x S={S_len} L={L}")
+    results["landmark_attention_ref"] = {
+        "us": t_lm * 1e6, "speedup_vs_exact": t_full / max(t_lm, 1e-9)}
+
+
+def main() -> None:
+    results: dict = {}
+    bench_accum_apply(results)
+    bench_fused_both(results)
+    bench_structural_vs_dense(results)
+    bench_landmark_ref(results)
+    payload = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+        },
+        "anchor": ANCHOR,
+        "results": results,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("bench_json", 0.0, f"wrote {BENCH_PATH.name}")
 
 
 if __name__ == "__main__":

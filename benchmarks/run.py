@@ -1,8 +1,12 @@
 """Benchmark harness: one module per paper table/figure + system benches.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows. Suites that track a perf
+trajectory (currently ``kernels``) also write a BENCH_*.json at the repo
+root — old-vs-new kernel and structural-vs-dense timings live in
+``BENCH_kernels.json``.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
+  PYTHONPATH=src python -m benchmarks.run kernels    # refresh BENCH_kernels.json
 """
 from __future__ import annotations
 

@@ -15,6 +15,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sketch import AccumSketch
+from repro.util import env_flag
+
+
+def default_use_kernel() -> bool:
+    """Route structural applications through the Pallas kernels by default on
+    TPU (compiled MXU path); XLA's fused gathers win elsewhere.
+
+    Overridable with REPRO_SKETCH_KERNEL=0/1."""
+    return env_flag("REPRO_SKETCH_KERNEL", jax.default_backend() == "tpu")
 
 
 def sketch_right(K: jax.Array, sk: AccumSketch) -> jax.Array:
@@ -52,8 +61,21 @@ def unsketch_mat(sk: AccumSketch, W: jax.Array) -> jax.Array:
     )
 
 
-def sketch_both(K: jax.Array, sk: AccumSketch) -> tuple[jax.Array, jax.Array]:
-    """(K S, Sᵀ K S) sharing the K S intermediate, as in the paper."""
+def sketch_both(
+    K: jax.Array, sk: AccumSketch, *, use_kernel: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """(K S, Sᵀ K S) sharing the K S intermediate, as in the paper.
+
+    With ``use_kernel`` (auto: True on TPU) the pair is computed by the fused
+    single-sweep Pallas kernel — one pass over K, W accumulated in-kernel —
+    instead of two gather passes."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if use_kernel:
+        from repro.kernels.accum_apply.ops import sketch_both_kernel
+        # W stays float32: it was accumulated in f32 VMEM and feeds the d×d
+        # solve — downcasting to a low-precision K dtype would throw that away
+        return sketch_both_kernel(K, sk)
     KS = sketch_right(K, sk)
     return KS, sketch_left(sk, KS)
 
@@ -61,18 +83,20 @@ def sketch_both(K: jax.Array, sk: AccumSketch) -> tuple[jax.Array, jax.Array]:
 def gram_sketch(sk: AccumSketch) -> jax.Array:
     """Sᵀ S (d, d) without materializing S.
 
-    SᵀS[j,j'] = Σ over coincident indices of coef products; computed via the
-    (m·d)-sparse representation: SᵀS = CᵀC where C is the (n, d) dense form —
-    but done through a (m·d)² coincidence check, O((md)²) ≪ O(n d²) when md ≪ n.
-    """
+    Scatter-add formulation: the m·d non-zero entries are grouped by their row
+    index (segment-sum over the ≤ m·d *distinct* sampled rows), giving the
+    compressed (md, d) row block B with B[rank(k), j] = S[k, j]; then
+    SᵀS = BᵀB. O(m·d) scatter + one (d × md × d) GEMM, O(m·d²) memory —
+    replaces the seed's (md)² coincidence matrix, which blew up at
+    production m·d."""
     idx = sk.indices.reshape(-1)     # (md,)
     cf = sk.coef.reshape(-1)         # (md,)
-    coincide = (idx[:, None] == idx[None, :]).astype(cf.dtype)   # (md, md)
-    weighted = coincide * (cf[:, None] * cf[None, :])
-    # column of S each flat entry belongs to:
     col = jnp.tile(jnp.arange(sk.d), sk.m)
-    onehot = jax.nn.one_hot(col, sk.d, dtype=cf.dtype)           # (md, d)
-    return onehot.T @ weighted @ onehot
+    # rank of each entry among the distinct sampled rows (static size: md)
+    _, ranks = jnp.unique(idx, return_inverse=True, size=idx.shape[0],
+                          fill_value=-1)
+    B = jnp.zeros((idx.shape[0], sk.d), cf.dtype).at[ranks, col].add(cf)
+    return B.T @ B
 
 
 def sketch_kernel_cols(

@@ -21,15 +21,21 @@ from repro.core.sketch import AccumSketch
 
 
 def _solve_psd(M: jax.Array, b: jax.Array) -> jax.Array:
-    """Solve M x = b for PSD M with trace-scaled jitter + Cholesky, lstsq fallback."""
+    """Solve M x = b for PSD M with trace-scaled jitter + Cholesky, lstsq fallback.
+
+    The fallback is gated behind ``lax.cond`` on the finiteness check so the
+    dense lstsq runs only when the Cholesky actually failed — not on every
+    solve (both branches of a ``jnp.where`` would evaluate)."""
     jitter = 1e-8 * (jnp.trace(M) / M.shape[0] + 1e-30)
     Mj = M + jitter * jnp.eye(M.shape[0], dtype=M.dtype)
     L, ok = jax.scipy.linalg.cho_factor(Mj, lower=True)
     x = jax.scipy.linalg.cho_solve((L, ok), b)
-    bad = ~jnp.all(jnp.isfinite(x))
-    x_ls = jnp.linalg.lstsq(Mj, b[:, None] if b.ndim == 1 else b)[0]
-    x_ls = x_ls[:, 0] if b.ndim == 1 else x_ls
-    return jnp.where(bad, x_ls, x)
+
+    def _lstsq(_):
+        x_ls = jnp.linalg.lstsq(Mj, b[:, None] if b.ndim == 1 else b)[0]
+        return x_ls[:, 0] if b.ndim == 1 else x_ls
+
+    return jax.lax.cond(jnp.all(jnp.isfinite(x)), lambda _: x, _lstsq, None)
 
 
 # --------------------------------------------------------------------------- #
@@ -83,9 +89,13 @@ def _fit_from_C(C: jax.Array, W: jax.Array, y: jax.Array, lam: float):
 def krr_sketched_fit(
     K: jax.Array, y: jax.Array, lam: float, sk: AccumSketch,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
+    *, use_kernel: bool | None = None,
 ) -> SketchedKRR:
-    """Structural path on a precomputed K: C via column gathers, O(n·m·d)."""
-    C, W = A.sketch_both(K, sk)
+    """Structural path on a precomputed K: C and W in one pass, O(n·m·d).
+
+    ``use_kernel`` (auto: True on TPU) routes (C, W) through the fused
+    single-sweep Pallas kernel instead of two XLA gather passes."""
+    C, W = A.sketch_both(K, sk, use_kernel=use_kernel)
     theta, fitted = _fit_from_C(C, W, y, lam)
     return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted)
 
@@ -101,14 +111,25 @@ def krr_sketched_fit_dense(
     return SketchedKRR(theta, None, S, X_train, kernel_fn, fitted)
 
 
+def _sketch_left_routed(sk, C, use_kernel: bool | None):
+    """W = Sᵀ C through the Pallas GEMM kernel (auto on TPU) or XLA gathers."""
+    if use_kernel is None:
+        use_kernel = A.default_use_kernel()
+    if use_kernel:
+        from repro.kernels.accum_apply.ops import sketch_left_kernel
+        return sketch_left_kernel(sk, C).astype(C.dtype)
+    return A.sketch_left(sk, C)
+
+
 def krr_sketched_fit_matfree(
     X: jax.Array, y: jax.Array, lam: float, sk: AccumSketch, kernel_fn: Callable,
-    *, chunk: int | None = None,
+    *, chunk: int | None = None, use_kernel: bool | None = None,
 ) -> SketchedKRR:
     """Matrix-free path: never forms K. C = K S from O(n·m·d) kernel evals;
-    W = Sᵀ C is a row gather of C. This is the production configuration."""
+    W = Sᵀ C is a row gather of C (routed through the Pallas kernel on TPU).
+    This is the production configuration."""
     C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
-    W = A.sketch_left(sk, C)
+    W = _sketch_left_routed(sk, C, use_kernel)
     # symmetrize W: SᵀKS is symmetric in exact arithmetic
     W = 0.5 * (W + W.T)
     theta, fitted = _fit_from_C(C, W, y, lam)
@@ -118,6 +139,7 @@ def krr_sketched_fit_matfree(
 def krr_sketched_fit_pcg(
     X: jax.Array, y: jax.Array, lam: float, sk: AccumSketch, kernel_fn: Callable,
     *, iters: int = 30, chunk: int | None = None,
+    use_kernel: bool | None = None,
 ) -> SketchedKRR:
     """Falkon-flavoured solver (Rudi et al. 2017) on the accumulation sketch:
     preconditioned CG on the Woodbury system
@@ -130,7 +152,7 @@ def krr_sketched_fit_pcg(
     would factor an (md)×(md) system. O(n·m·d·iters), never forms K, and never
     materializes CᵀC (CG touches it only through matvecs)."""
     C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
-    W = A.sketch_left(sk, C)
+    W = _sketch_left_routed(sk, C, use_kernel)
     W = 0.5 * (W + W.T)
     n, d = C.shape
     jitter = 1e-8 * (jnp.trace(W) / d + 1e-30)

@@ -186,20 +186,24 @@ def make_seq_sketch(key, seq_len: int, d: int, m: int = 1, *, local: bool = True
     Unsigned: signs do not commute with softmax (see `landmark_pool`).
 
     `local=True` (default) draws one uniform center per column and pools the m
-    *contiguous* positions starting there. The paper's framework requires only
-    i.i.d. COLUMNS — "the coordinates in each column are correlated and can
-    follow different distributions" — so a contiguous block around an i.i.d.
-    center is a faithful instance of Algorithm 1. For sequence data locality is
-    the right correlation structure: pooling m adjacent tokens averages noise
-    *within* a semantic cluster (the Nyströmformer segment-mean insight),
-    whereas pooling m i.i.d.-uniform positions mixes unrelated clusters and
-    makes the landmark worse as m grows. `local=False` gives the i.i.d.-uniform
+    contiguous positions of the *m-aligned window* containing it (the chunk
+    [m·⌊c/m⌋, m·⌊c/m⌋+m)). The paper's framework requires only i.i.d.
+    COLUMNS — "the coordinates in each column are correlated and can follow
+    different distributions" — so an aligned block selected by an i.i.d.
+    center is a faithful instance of Algorithm 1. For sequence data locality
+    is the right correlation structure: pooling m adjacent tokens averages
+    noise *within* a semantic cluster (the Nyströmformer segment-mean
+    insight), and grid alignment keeps windows from straddling two clusters —
+    an unaligned window crosses a boundary with probability ≈ m/cluster-len,
+    and a straddling landmark is *worse* than a single sampled token, which
+    inverted the error-vs-m trend. `local=False` gives the i.i.d.-uniform
     variant for ablation."""
     if not local or m == 1:
         return make_accum_sketch(key, seq_len, d, m=m, signed=False)
     probs = jnp.full((seq_len,), 1.0 / seq_len, dtype=jnp.float32)
     centers = jax.random.randint(key, (d,), 0, seq_len)
-    indices = (centers[None, :] + jnp.arange(m)[:, None]) % seq_len   # (m, d)
+    start = (centers // m) * m                                        # align
+    indices = (start[None, :] + jnp.arange(m)[:, None]) % seq_len     # (m, d)
     return AccumSketch(
         indices=indices.astype(jnp.int32),
         signs=jnp.ones((m, d), jnp.float32),

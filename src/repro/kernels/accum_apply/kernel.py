@@ -1,14 +1,39 @@
-"""Pallas TPU kernel: fused gather-accumulate K·S for accumulation sketches.
+"""Pallas TPU kernels: vectorized gather→GEMM accumulation-sketch application.
 
-TPU adaptation (DESIGN.md §3): instead of a CPU-style sparse SpMM, the kernel
-tiles K's rows into VMEM blocks and, for each output tile, accumulates the m
-sub-sketches in VREGs. The sketch indices/coefs ride in as scalar-prefetch
-operands (SMEM) so the column gather addresses are known before the tile loop
-— the Pallas analogue of the paper's "few extra matrix additions".
+Design (this file supersedes the seed's scalar-gather loop, kept below as
+``accum_apply_scalar`` for benchmarking):
 
-Grid: (R/bm, d/bd). Per step:
-  K block   (bm, N)  — rows resident in VMEM (wrapper chunks N when large)
-  out block (bm, bd) — accumulated over m picks per output column
+The accumulation sketch S = Σ_i S_(i) has m non-zeros per column, described by
+``idx``/``coef`` of shape (m, d).  The seed kernel applied K·S one column and
+one sub-sketch at a time with ``pl.load`` scalar gathers — O(m·d) serial VMEM
+loads per tile, no MXU use.  The rewrite turns the sparse application into a
+dense GEMM the MXU can chew on:
+
+  1. per output tile, materialize the (N, bd) *coefficient block* of S in VMEM
+     by comparing a broadcasted row-iota against the prefetched indices
+     (one-hot build: m vectorized compares, no scatter);
+  2. contract K_tile (bm, N) with that block via ``jax.lax.dot_general`` with
+     ``preferred_element_type=float32`` — a (bm, N) × (N, bd) MXU matmul.
+
+The index/coef slices still ride in via scalar prefetch (SMEM) so they are
+resident before the tile loop, as in the seed.
+
+``accum_sketch_both`` fuses the two sketch applications of the paper's §3.3,
+
+    C = K S          (n, d)
+    W = Sᵀ K S = SᵀC (d, d)
+
+into ONE grid sweep over K: the (R/bm, N/bn) grid accumulates C row-tiles in a
+f32 VMEM scratch across column chunks, and on each row-tile's last chunk folds
+SᵀC into the (d, d) output revisited by every grid step.  This avoids a second
+pass over — and a second HBM read of — C.
+
+VMEM budget (f32, defaults bm=256, bd=64, N≤8192 per chunk):
+  accum_apply:      K tile 256×8192×4 = 8 MiB  + one-hot 8192×64×4 = 2 MiB
+                    + out 256×64×4 = 64 KiB                      ≈ 10.1 MiB
+  accum_sketch_both (bn=2048, d≤512): K tile 2 MiB + S chunk 512 KiB
+                    + acc/C/S-rows 3×(256·d·4) + W d²·4          ≲ 4 MiB
+both under the ~16 MiB/core budget.
 """
 from __future__ import annotations
 
@@ -20,7 +45,164 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, coef_ref, K_ref, out_ref, *, m: int, bd: int):
+def _coef_block(idx_ref, coef_ref, *, base, nrows: int, j0, ncols: int, m: int):
+    """(nrows, ncols) dense block of S covering S rows [base, base+nrows) and
+    columns [j0, j0+ncols), built from the SMEM-prefetched (m, d) idx/coef.
+
+    One-hot build: a broadcasted row-iota is compared against each sub-sketch's
+    index vector; matches deposit that sub-sketch's coefficient.  Colliding
+    draws (same index, same column, different i) sum, exactly like Σ_i S_(i).
+    """
+    rid = jax.lax.broadcasted_iota(jnp.int32, (nrows, ncols), 0) + base
+    blk = jnp.zeros((nrows, ncols), jnp.float32)
+    for i in range(m):
+        idx_v = jnp.stack([idx_ref[i, j0 + jj] for jj in range(ncols)])
+        cf_v = jnp.stack([coef_ref[i, j0 + jj] for jj in range(ncols)])
+        blk = blk + jnp.where(
+            rid == idx_v[None, :], cf_v[None, :].astype(jnp.float32), 0.0
+        )
+    return blk
+
+
+# --------------------------------------------------------------------------- #
+# K·S — vectorized gather→GEMM
+# --------------------------------------------------------------------------- #
+
+def _gemm_kernel(idx_ref, coef_ref, K_ref, out_ref, *, m: int, bd: int):
+    j0 = pl.program_id(1) * bd
+    sblk = _coef_block(idx_ref, coef_ref, base=0, nrows=K_ref.shape[1],
+                       j0=j0, ncols=bd, m=m)                      # (N, bd)
+    out_ref[...] = jax.lax.dot_general(
+        K_ref[...].astype(jnp.float32), sblk,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "interpret"))
+def accum_apply(
+    K: jax.Array, idx: jax.Array, coef: jax.Array, *,
+    bm: int = 256, bd: int = 64, interpret: bool = True,
+) -> jax.Array:
+    """K: (R, N); idx/coef: (m, d). Returns K S (R, d) via MXU GEMM tiles.
+
+    Shapes must tile exactly (R % bm == 0, d % bd == 0) — the ops.py wrappers
+    pad arbitrary shapes and chunk N (addition commutes with the accumulation,
+    the same identity the paper uses)."""
+    R, N = K.shape
+    m, d = idx.shape
+    bm = min(bm, R)
+    bd = min(bd, d)
+    assert R % bm == 0 and d % bd == 0, (R, bm, d, bd)
+    grid = (R // bm, d // bd)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, m=m, bd=bd),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,             # idx, coef in SMEM
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, N), lambda r, j, *_: (r, 0))],
+            out_specs=pl.BlockSpec((bm, bd), lambda r, j, *_: (r, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, d), K.dtype),
+        interpret=interpret,
+    )(idx, coef, K)
+
+
+# --------------------------------------------------------------------------- #
+# fused (K·S, Sᵀ·K·S) — one sweep over K
+# --------------------------------------------------------------------------- #
+
+def _both_kernel(idx_ref, coef_ref, K_ref, C_ref, W_ref, acc_ref,
+                 *, m: int, bm: int, bn: int, d: int):
+    r, c = pl.program_id(0), pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    # S chunk for the columns of K in this grid step: S rows [c·bn, (c+1)·bn).
+    # Indices outside the chunk simply never match the offset iota — the
+    # column-chunked partial products need no explicit masking.
+    scols = _coef_block(idx_ref, coef_ref, base=c * bn, nrows=bn,
+                        j0=0, ncols=d, m=m)                       # (bn, d)
+    part = jax.lax.dot_general(
+        K_ref[...].astype(jnp.float32), scols,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                             # (bm, d)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = part
+
+    @pl.when(c > 0)
+    def _accum():
+        acc_ref[...] = acc_ref[...] + part
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        C_tile = acc_ref[...]
+        C_ref[...] = C_tile.astype(C_ref.dtype)
+        # fold this row-tile's contribution Sᵀ_tile · C_tile into W while the
+        # tile is still VMEM-resident — no second pass, no HBM re-read of C
+        srows = _coef_block(idx_ref, coef_ref, base=r * bm, nrows=bm,
+                            j0=0, ncols=d, m=m)                   # (bm, d)
+        wpart = jax.lax.dot_general(
+            srows, C_tile,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                         # (d, d)
+
+        @pl.when(r == 0)
+        def _w_init():
+            W_ref[...] = wpart
+
+        @pl.when(r > 0)
+        def _w_accum():
+            W_ref[...] = W_ref[...] + wpart
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def accum_sketch_both(
+    K: jax.Array, idx: jax.Array, coef: jax.Array, *,
+    bm: int = 256, bn: int = 2048, interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (C, W) = (K S, SᵀK S) for (logically square) K in one grid sweep.
+
+    Grid (R/bm, N/bn), column chunks innermost: C row-tiles accumulate over
+    chunks in a f32 scratch; each row-tile's last chunk writes C and folds
+    SᵀC into the (d, d) W output, which every step revisits (block (0, 0)).
+    K may arrive rectangular from zero-padding as long as every sketch index
+    is < min(R, N) — padded rows of S are all-zero and contribute nothing.
+    W is returned in float32 (it feeds a d×d solve, not a matmul chain)."""
+    R, N = K.shape
+    m, d = idx.shape
+    bm = min(bm, R)
+    bn = min(bn, N)
+    assert R % bm == 0 and N % bn == 0, (R, N, bm, bn)
+    grid = (R // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_both_kernel, m=m, bm=bm, bn=bn, d=d),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, bn), lambda r, c, *_: (r, c))],
+            out_specs=[
+                pl.BlockSpec((bm, d), lambda r, c, *_: (r, 0)),
+                pl.BlockSpec((d, d), lambda r, c, *_: (0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((R, d), K.dtype),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )(idx, coef, K)
+
+
+# --------------------------------------------------------------------------- #
+# seed scalar-gather kernel — kept as the benchmark baseline
+# --------------------------------------------------------------------------- #
+
+def _scalar_kernel(idx_ref, coef_ref, K_ref, out_ref, *, m: int, bd: int):
     j0 = pl.program_id(1) * bd
     acc = jnp.zeros(out_ref.shape, jnp.float32)
     for jj in range(bd):                       # static loop over tile columns
@@ -35,15 +217,13 @@ def _kernel(idx_ref, coef_ref, K_ref, out_ref, *, m: int, bd: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bd", "interpret"))
-def accum_apply(
+def accum_apply_scalar(
     K: jax.Array, idx: jax.Array, coef: jax.Array, *,
     bm: int = 256, bd: int = 8, interpret: bool = True,
 ) -> jax.Array:
-    """K: (R, N); idx/coef: (m, d). Returns K S (R, d).
-
-    VMEM budget: bm × N × itemsize per K tile — the ops.py wrapper splits N
-    into ≤8k-column chunks and sums partial results (addition commutes with
-    the accumulation, same identity the paper uses)."""
+    """The seed's scalar per-column gather loop (no MXU). Benchmarks only —
+    `benchmarks/kernel_bench.py` times it against `accum_apply` to track the
+    gather→GEMM speedup in BENCH_kernels.json."""
     R, N = K.shape
     m, d = idx.shape
     bm = min(bm, R)
@@ -51,9 +231,9 @@ def accum_apply(
     assert R % bm == 0 and d % bd == 0, (R, bm, d, bd)
     grid = (R // bm, d // bd)
     return pl.pallas_call(
-        functools.partial(_kernel, m=m, bd=bd),
+        functools.partial(_scalar_kernel, m=m, bd=bd),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,             # idx, coef in SMEM
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[pl.BlockSpec((bm, N), lambda r, j, *_: (r, 0))],
             out_specs=pl.BlockSpec((bm, bd), lambda r, j, *_: (r, j)),

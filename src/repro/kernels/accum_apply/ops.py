@@ -1,34 +1,181 @@
-"""jit'd public wrapper for the accum_apply kernel: chunks wide K so each
-Pallas tile fits VMEM, and exposes an AccumSketch-native entry point."""
+"""Public entry points for the accum_apply kernel family.
+
+This layer makes the kernels shape- and backend-agnostic:
+
+  * ``interpret`` defaults to backend autodetection — compiled Mosaic on TPU,
+    interpreter everywhere else (CPU CI, tests).
+  * block sizes come from a small autotune table keyed on
+    (R, N, d, m, dtype) with a VMEM-budget heuristic fallback;
+  * arbitrary shapes are zero-padded up to the block grid and sliced back
+    (padded K rows/columns contribute nothing; padded sketch columns carry
+    coef 0);
+  * wide K is chunked along columns with ``jax.lax.scan`` so the jaxpr stays
+    O(1) in the number of chunks — the seed's Python loop unrolled one
+    pallas_call per chunk under jit;
+  * ``sketch_both_kernel`` exposes the fused (K S, SᵀK S) single-sweep kernel,
+    ``sketch_left_kernel`` applies Sᵀ via the same GEMM kernel on Mᵀ.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sketch import AccumSketch
-from repro.kernels.accum_apply.kernel import accum_apply
+from repro.kernels.accum_apply.kernel import accum_apply, accum_sketch_both
+from repro.util import env_flag
 
-MAX_COLS = 8192   # per-tile K columns: bm·MAX_COLS·4B ≤ ~8MB VMEM at bm=256
+MAX_COLS = 8192   # per-chunk K columns: bm·MAX_COLS·4B ≤ ~8MB VMEM at bm=256
+
+
+def default_interpret() -> bool:
+    """False (compiled Mosaic) on TPU, True (interpreter) elsewhere.
+
+    Overridable with REPRO_PALLAS_INTERPRET=0/1 for A/B runs."""
+    return env_flag("REPRO_PALLAS_INTERPRET", jax.default_backend() != "tpu")
+
+
+# Measured-good block sizes, keyed (R, N, d, m, dtype-name). N is the
+# per-chunk width (≤ MAX_COLS). Fallback heuristic below.
+_BLOCK_TABLE: dict[tuple[int, int, int, int, str], tuple[int, int]] = {
+    (4096, 8192, 64, 4, "float32"): (256, 64),
+    (4096, 8192, 64, 4, "bfloat16"): (256, 64),
+    (8192, 8192, 64, 4, "float32"): (256, 64),
+    (4096, 8192, 128, 4, "float32"): (256, 128),
+    (4096, 4096, 64, 4, "float32"): (512, 64),
+    (1024, 1024, 64, 4, "float32"): (256, 64),
+}
+
+
+def autotune_blocks(R: int, N: int, d: int, m: int, dtype) -> tuple[int, int]:
+    """(bm, bd) for the gather→GEMM kernel: exact table hit, else heuristic.
+
+    Heuristic: keep the K tile ≤ ~8 MiB of VMEM (bm·min(N, MAX_COLS)·itemsize)
+    and make the GEMM lane dimension as wide as d allows (≤ 128 lanes)."""
+    key = (R, N, d, m, jnp.dtype(dtype).name)
+    if key in _BLOCK_TABLE:
+        return _BLOCK_TABLE[key]
+    itemsize = jnp.dtype(dtype).itemsize
+    ncols = min(N, MAX_COLS)
+    bm = max(8, min(256, (8 * 1024 * 1024) // max(ncols * itemsize, 1)))
+    bd = min(d, 128)
+    return bm, bd
+
+
+def _pad_rows(K: jax.Array, mult: int) -> jax.Array:
+    pad = (-K.shape[0]) % mult
+    return jnp.pad(K, ((0, pad), (0, 0))) if pad else K
+
+
+def _pad_sketch(idx: jax.Array, coef: jax.Array, mult: int):
+    """Pad sketch columns to a multiple of ``mult`` with idx 0 / coef 0 —
+    zero-coefficient columns gather nothing and are sliced off the output."""
+    pad = (-idx.shape[1]) % mult
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+        coef = jnp.pad(coef, ((0, 0), (0, pad)))
+    return idx, coef
+
+
+def _apply_padded(K, idx, coef, *, bm, bd, interpret):
+    """accum_apply on arbitrary (R, d): pad to the block grid, slice back."""
+    R, _ = K.shape
+    d = idx.shape[1]
+    bm_e = min(bm, R)
+    bd_e = min(bd, d)
+    Kp = _pad_rows(K, bm_e)
+    idx_p, coef_p = _pad_sketch(idx, coef, bd_e)
+    out = accum_apply(Kp, idx_p, coef_p, bm=bm_e, bd=bd_e, interpret=interpret)
+    return out[:R, :d]
 
 
 def sketch_right_kernel(
-    K: jax.Array, sk: AccumSketch, *, bm: int = 256, bd: int = 8,
-    interpret: bool = True,
+    K: jax.Array, sk: AccumSketch, *, bm: int | None = None,
+    bd: int | None = None, interpret: bool | None = None,
 ) -> jax.Array:
-    """K S via the Pallas kernel; splits K's columns into chunks and sums the
-    per-chunk partial products (the paper's accumulation identity)."""
+    """K S via the Pallas kernel; wide K is `lax.scan`ned over column chunks
+    and the f32 partial products summed (the paper's accumulation identity).
+    The scan keeps the jaxpr a single pallas_call regardless of N."""
+    if interpret is None:
+        interpret = default_interpret()
     R, N = K.shape
+    m, d = sk.indices.shape
+    a_bm, a_bd = autotune_blocks(R, N, d, m, K.dtype)
+    bm = a_bm if bm is None else bm
+    bd = a_bd if bd is None else bd
     coef = sk.coef.astype(jnp.float32)
     if N <= MAX_COLS:
-        return accum_apply(K, sk.indices, coef, bm=bm, bd=bd, interpret=interpret)
-    out = jnp.zeros((R, sk.d), K.dtype)
-    for lo in range(0, N, MAX_COLS):
-        hi = min(lo + MAX_COLS, N)
-        # indices falling outside [lo, hi) are redirected to column 0 with
+        return _apply_padded(K, sk.indices, coef, bm=bm, bd=bd,
+                             interpret=interpret)
+
+    def _chunk_sketch(lo, hi):
+        # indices outside [lo, hi) are redirected to column 0 with
         # coefficient 0 — the partial products then sum to the exact result
         inside = (sk.indices >= lo) & (sk.indices < hi)
         idx_c = jnp.where(inside, sk.indices - lo, 0).astype(jnp.int32)
         coef_c = jnp.where(inside, coef, 0.0)
-        out = out + accum_apply(K[:, lo:hi], idx_c, coef_c, bm=bm, bd=bd,
-                                interpret=interpret).astype(out.dtype)
-    return out
+        return idx_c, coef_c
+
+    def body(acc, lo):
+        idx_c, coef_c = _chunk_sketch(lo, lo + MAX_COLS)
+        Kc = jax.lax.dynamic_slice_in_dim(K, lo, MAX_COLS, axis=1)
+        part = _apply_padded(Kc, idx_c, coef_c, bm=bm, bd=bd,
+                             interpret=interpret)
+        return acc + part.astype(jnp.float32), None
+
+    # scan the full-width chunks of K in place (no padded copy of K — this is
+    # exactly the path where K is too big to duplicate), then fold in the
+    # ragged tail chunk with one extra call
+    nfull = N // MAX_COLS
+    los = jnp.arange(nfull, dtype=jnp.int32) * MAX_COLS
+    acc, _ = jax.lax.scan(body, jnp.zeros((R, d), jnp.float32), los)
+    if N % MAX_COLS:
+        lo = nfull * MAX_COLS
+        idx_c, coef_c = _chunk_sketch(lo, N)
+        acc = acc + _apply_padded(K[:, lo:], idx_c, coef_c, bm=bm, bd=bd,
+                                  interpret=interpret).astype(jnp.float32)
+    return acc.astype(K.dtype)
+
+
+def sketch_left_kernel(
+    sk: AccumSketch, M: jax.Array, *, bm: int | None = None,
+    bd: int | None = None, interpret: bool | None = None,
+) -> jax.Array:
+    """Sᵀ M (d, c) through the same GEMM kernel: Sᵀ M = (Mᵀ S)ᵀ."""
+    return sketch_right_kernel(M.T, sk, bm=bm, bd=bd, interpret=interpret).T
+
+
+def autotune_both_blocks(n: int, interpret: bool) -> tuple[int, int]:
+    """(bm, bn) for the fused kernel. Compiled TPU wants VMEM-sized tiles
+    (bm·bn·4B ≤ 2 MiB); the interpreter wants few, large grid steps (per-step
+    dispatch dominates there — measured 3–4× on the CPU benchmark host)."""
+    if interpret:
+        return min(2048, n), min(4096, n)
+    return 256, 2048
+
+
+def sketch_both_kernel(
+    K: jax.Array, sk: AccumSketch, *, bm: int | None = None,
+    bn: int | None = None, interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (C, W) = (K S, SᵀK S) in one sweep over square K (n, n).
+
+    W accumulates across grid steps in the kernel — no second pass over C and
+    no second HBM read. Arbitrary n and d are padded to the block grid (padded
+    S rows are never indexed, so W is exact) and sliced back. W is float32."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, n2 = K.shape
+    assert n == n2, "sketch_both_kernel expects square K"
+    d = sk.d
+    coef = sk.coef.astype(jnp.float32)
+    a_bm, a_bn = autotune_both_blocks(n, interpret)
+    bm_e = min(a_bm if bm is None else bm, n)
+    bn_e = min(a_bn if bn is None else bn, n)
+    # pad rows and columns of K to the (bm, bn) grid; pad d to the lane tile
+    rpad = (-n) % bm_e
+    cpad = (-n) % bn_e
+    Kp = jnp.pad(K, ((0, rpad), (0, cpad))) if (rpad or cpad) else K
+    idx_p, coef_p = _pad_sketch(sk.indices, coef, min(8, max(sk.d, 1)))
+    C, W = accum_sketch_both(Kp, idx_p, coef_p, bm=bm_e, bn=bn_e,
+                             interpret=interpret)
+    return C[:n, :d], W[:d, :d]

@@ -14,3 +14,18 @@ def accum_apply_ref(K: jax.Array, idx: jax.Array, coef: jax.Array) -> jax.Array:
     cols = cols.reshape(K.shape[0], *idx.shape)             # (R, m, d)
     return jnp.einsum("rmd,md->rd", cols.astype(jnp.float32),
                       coef.astype(jnp.float32)).astype(K.dtype)
+
+
+def sketch_both_ref(
+    K: jax.Array, idx: jax.Array, coef: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused kernel: C = K S, W = Sᵀ C (row gather of C).
+
+    W is derived from the float32 C — the fused kernel folds SᵀC from its f32
+    VMEM accumulator *before* casting C to the storage dtype, so the oracle
+    must not round C first. Returns (C in K.dtype, W in float32)."""
+    C32 = accum_apply_ref(K.astype(jnp.float32), idx, coef)
+    rows = jnp.take(C32, idx.reshape(-1), axis=0)
+    rows = rows.reshape(*idx.shape, C32.shape[1])           # (m, d, d)
+    W = jnp.einsum("mdc,md->dc", rows, coef.astype(jnp.float32))
+    return C32.astype(K.dtype), W

@@ -1,0 +1,14 @@
+"""Tiny shared helpers (no jax imports — safe to import from anywhere)."""
+from __future__ import annotations
+
+import os
+
+_FALSY = ("0", "false", "False", "FALSE", "off", "no")
+
+
+def env_flag(name: str, default: bool) -> bool:
+    """Tri-state boolean env override: unset → default, else truthiness."""
+    env = os.environ.get(name)
+    if env is None:
+        return default
+    return env not in _FALSY

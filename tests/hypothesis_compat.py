@@ -1,0 +1,39 @@
+"""Import-or-stub shim for hypothesis.
+
+The tier-1 environment may not ship hypothesis; property-based tests import
+``given``/``settings``/``st`` from here so they skip cleanly (instead of
+failing collection with ModuleNotFoundError) when the dependency is absent.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        """Replace the property test with a skip marker (zero-arg body so
+        pytest never tries to resolve the strategy kwargs as fixtures)."""
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategiesStub:
+        """Stands in for hypothesis.strategies at decoration time only."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategiesStub()

@@ -7,8 +7,15 @@ import pytest
 
 from repro.core.sketch import make_accum_sketch
 from repro.core.sketched_attention import accum_attention, make_seq_sketch
-from repro.kernels.accum_apply.ops import sketch_right_kernel
-from repro.kernels.accum_apply.ref import accum_apply_ref
+from repro.kernels.accum_apply.ops import (
+    MAX_COLS,
+    autotune_blocks,
+    default_interpret,
+    sketch_both_kernel,
+    sketch_left_kernel,
+    sketch_right_kernel,
+)
+from repro.kernels.accum_apply.ref import accum_apply_ref, sketch_both_ref
 from repro.kernels.landmark_attention.kernel import landmark_attention
 from repro.kernels.landmark_attention.ops import accum_attention_kernel
 from repro.kernels.landmark_attention.ref import landmark_attention_ref
@@ -38,6 +45,92 @@ def test_accum_apply_wide_K_chunked():
     ref = accum_apply_ref(K, sk.indices, sk.coef)
     out = sketch_right_kernel(K, sk, bm=128)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_accum_apply_wide_K_non_multiple_chunk():
+    """N neither a multiple of MAX_COLS nor of the block: scan + padding."""
+    N = 2 * MAX_COLS + 777
+    K = jax.random.normal(KEY, (96, N), jnp.float32)
+    sk = make_accum_sketch(jax.random.fold_in(KEY, 5), N, 12, 3)
+    ref = accum_apply_ref(K, sk.indices, sk.coef)
+    out = sketch_right_kernel(K, sk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_accum_apply_odd_shapes_padded():
+    """Shapes that do not tile (R=100, d=10): the ops wrapper pads and slices."""
+    K = jax.random.normal(KEY, (100, 300), jnp.float32)
+    sk = make_accum_sketch(jax.random.fold_in(KEY, 9), 300, 10, 3)
+    ref = accum_apply_ref(K, sk.indices, sk.coef)
+    out = sketch_right_kernel(K, sk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_wide_K_chunking_does_not_unroll():
+    """Jaxpr-size regression: the lax.scan chunk loop keeps the traced program
+    O(1) in the number of chunks (the seed's Python loop emitted one
+    pallas_call per chunk, exploding compile time for wide K)."""
+
+    def n_eqns(N):
+        sk = make_accum_sketch(KEY, N, 16, 2)
+        jaxpr = jax.make_jaxpr(lambda K: sketch_right_kernel(K, sk))(
+            jnp.zeros((64, N), jnp.float32)
+        )
+        return len(jaxpr.jaxpr.eqns)
+
+    assert n_eqns(2 * MAX_COLS) == n_eqns(4 * MAX_COLS)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "n,d,m", [(128, 8, 1), (256, 32, 4), (128, 16, 8), (256, 64, 2)]
+)
+def test_sketch_both_fused_sweep(n, d, m, dtype):
+    """Fused (C, W) kernel vs the two-pass oracle across shapes × dtypes."""
+    K = jax.random.normal(KEY, (n, n), dtype)
+    K = (0.5 * (K.astype(jnp.float32) + K.astype(jnp.float32).T)).astype(dtype)
+    sk = make_accum_sketch(jax.random.fold_in(KEY, n + d * m), n, d, m)
+    C_ref, W_ref = sketch_both_ref(K, sk.indices, sk.coef.astype(jnp.float32))
+    C, W = sketch_both_kernel(K, sk, bm=64, bn=128)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(C, np.float32), np.asarray(C_ref, np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(W, np.float32), np.asarray(W_ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_sketch_both_fused_odd_shapes():
+    """n=400, d=19 (nothing tiles): padded fused kernel stays exact."""
+    n, d, m = 400, 19, 4
+    K = jax.random.normal(KEY, (n, n), jnp.float32)
+    sk = make_accum_sketch(jax.random.fold_in(KEY, 41), n, d, m)
+    C_ref, W_ref = sketch_both_ref(K, sk.indices, sk.coef)
+    C, W = sketch_both_kernel(K, sk)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_left_kernel_matches_dense():
+    sk = make_accum_sketch(jax.random.fold_in(KEY, 77), 300, 12, 3)
+    M = jax.random.normal(KEY, (300, 7), jnp.float32)
+    S = sk.dense()
+    out = sketch_left_kernel(sk, M)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(S.T @ M),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_interpret_autodetect_and_autotune():
+    """Backend autodetection (no TPU in CI → interpreter) and the block table
+    covering the benchmark anchor shape."""
+    if jax.default_backend() != "tpu":
+        assert default_interpret() is True
+    bm, bd = autotune_blocks(4096, 8192, 64, 4, jnp.float32)
+    assert (bm, bd) == (256, 64)
+    # heuristic fallback stays within the VMEM budget and divides nothing
+    bm, bd = autotune_blocks(1000, 5000, 48, 3, jnp.float32)
+    assert bm >= 8 and 1 <= bd <= 48
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

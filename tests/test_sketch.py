@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     AccumSketch,
@@ -105,6 +105,20 @@ def test_structural_apply_equals_dense(n, d, m, r, seed):
         rtol=2e-4, atol=2e-4,
     )
     np.testing.assert_allclose(gram_sketch(sk), S.T @ S, rtol=2e-4, atol=2e-4)
+
+
+def test_gram_sketch_scatter_add_matches_dense():
+    """SᵀS via the segment-sum scatter-add (no (md)² coincidence matrix, no
+    (n, d) dense form) equals the dense algebra — incl. index collisions."""
+    for i, (n, d, m) in enumerate([(50, 5, 1), (100, 10, 3), (40, 8, 6)]):
+        sk = make_accum_sketch(jax.random.fold_in(KEY, 300 + i), n, d, m)
+        S = sk.dense()
+        np.testing.assert_allclose(np.asarray(gram_sketch(sk)),
+                                   np.asarray(S.T @ S), rtol=2e-5, atol=2e-5)
+    # jit-compatibility (static-size unique under the hood)
+    sk = make_accum_sketch(KEY, 64, 6, 2)
+    np.testing.assert_allclose(np.asarray(jax.jit(gram_sketch)(sk)),
+                               np.asarray(gram_sketch(sk)), rtol=1e-6, atol=1e-6)
 
 
 def test_weighted_sampling_distribution_respected():
