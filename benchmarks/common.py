@@ -19,8 +19,6 @@ def bimodal_data(key, n: int, gamma: float = 0.6, noise_sd: float = 0.5):
     x1 = jax.random.uniform(k1, (n - n2, 3))
     # inverse-CDF for pdf 2(5-2x)/9? — the paper's pdf ∏(5−2x_j), x_j ∈ [2,2.5]:
     # CDF F(x) = (5x − x² − 6)/1.25·... sample via rejection for fidelity
-    u = jax.random.uniform(k2, (4 * n2, 3), minval=2.0, maxval=2.5)
-    acc = jax.random.uniform(k3, (4 * n2, 3)) < (5.0 - 2.0 * u) / 1.0 / 1.0
     # accept elementwise by resampling columns; cheap approximation: weight-free
     # inverse transform:  F⁻¹(p) = (5 − sqrt(25 − 4(6 + 1.125p)))/2 · …
     p = jax.random.uniform(k2, (n2, 3))

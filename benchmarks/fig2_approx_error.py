@@ -9,7 +9,6 @@ worse; a medium m closes most of the gap to Gaussian sketching.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bimodal_data, emit

@@ -7,9 +7,15 @@ root — old-vs-new kernel and structural-vs-dense timings live in
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
   PYTHONPATH=src python -m benchmarks.run kernels    # refresh BENCH_kernels.json
+
+``--smoke`` runs suites that honor it (currently ``kernels``) at tiny shapes
+with a single rep — CI uses it to regenerate BENCH_kernels.json on every PR
+without timing out; the JSON is tagged ``"smoke": true`` so real trajectory
+numbers are never overwritten by CI artifacts.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -29,7 +35,12 @@ SUITES = {
 
 
 def main() -> None:
-    picks = sys.argv[1:] or list(SUITES)
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
+        # must be set before any suite builds its shapes (they read it lazily)
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        argv = [a for a in argv if a != "--smoke"]
+    picks = argv or list(SUITES)
     print("name,us_per_call,derived")
     failed = []
     for name in picks:

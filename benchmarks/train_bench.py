@@ -3,7 +3,6 @@ family) — tokens/s and the gradient-compression bytes saving."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.configs import ARCHS, reduced

@@ -2,6 +2,8 @@
 
 Builds an accumulation sketch (Algorithm 1), solves sketched KRR without ever
 forming the n×n kernel matrix, and compares against exact KRR and Nyström.
+The last section shows ADAPTIVE accumulation: specify an error target instead
+of m and let the progressive engine grow the sketch one O(n·d) slab at a time.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    get_kernel, insample_error, krr_exact_fitted,
+    get_kernel, insample_error, krr_exact_fitted, krr_sketched_fit_adaptive,
     krr_sketched_fit_matfree, make_accum_sketch, make_nystrom_sketch,
 )
 
@@ -36,3 +38,19 @@ for name, sk in {
     print(f"{name:20s} ‖f̂_S − f̂_n‖²_n = {float(err):.3e}")
 
 print("→ accumulation (medium m) ≈ Gaussian-sketch accuracy at Nyström cost.")
+
+# ---- adaptive accumulation ------------------------------------------------ #
+# The progressive engine rescues a cheap sampling scheme by GROWING m: each
+# step folds one new sub-sampling matrix into the running (C, W) with a rank-d
+# O(n·d) incremental update, until a plug-in holdout estimate of the sketched-
+# operator error clears the target. Callers specify a tolerance, not m.
+# (Sharper kernel + smaller d than above, so the error target actually bites.)
+kern_hard = get_kernel("gaussian", bandwidth=0.4)
+K = kern_hard(X, X)  # adaptive path works on a precomputed K (engine gathers cols)
+fitted_hard = krr_exact_fitted(K, y, lam)
+print("\nadaptive accumulation (error target instead of m, d=32):")
+for tol in [0.2, 0.05, 0.02]:
+    model = krr_sketched_fit_adaptive(K, y, lam, key, 32, tol=tol, m_max=32)
+    err = insample_error(model.fitted, fitted_hard)
+    print(f"  tol={tol:5.2f} → engine chose m={model.info['m']:2d} "
+          f"(est err {model.info['err']:.3f}), ‖f̂_S − f̂_n‖²_n = {float(err):.3e}")

@@ -1,0 +1,51 @@
+"""Render a pytest junit XML report as a GitHub job-summary markdown table.
+
+Usage (CI):  python scripts/junit_summary.py pytest-junit.xml >> "$GITHUB_STEP_SUMMARY"
+
+Prints a one-line verdict plus, for every failed/errored test, its id and the
+first lines of the failure message — so a red matrix leg is readable from the
+summary tab without scrolling raw pytest logs.
+"""
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def main(path: str) -> int:
+    root = ET.parse(path).getroot()
+    suites = [root] if root.tag == "testsuite" else list(root)
+    tests = failures = errors = skipped = 0
+    bad: list[tuple[str, str, str]] = []
+    total_time = 0.0
+    for suite in suites:
+        tests += int(suite.get("tests", 0))
+        failures += int(suite.get("failures", 0))
+        errors += int(suite.get("errors", 0))
+        skipped += int(suite.get("skipped", 0))
+        total_time += float(suite.get("time", 0.0))
+        for case in suite.iter("testcase"):
+            for kind in ("failure", "error"):
+                node = case.find(kind)
+                if node is None:
+                    continue
+                test_id = f"{case.get('classname', '?')}::{case.get('name', '?')}"
+                msg = (node.get("message") or node.text or "").strip()
+                first = "\n".join(msg.splitlines()[:8])
+                bad.append((kind.upper(), test_id, first))
+
+    passed = tests - failures - errors - skipped
+    verdict = "✅ green" if not bad else f"❌ {failures} failed / {errors} errored"
+    print("## Tier-1 tests\n")
+    print(f"{verdict} — {passed} passed, {skipped} skipped, "
+          f"{tests} total in {total_time:.0f}s\n")
+    for kind, test_id, msg in bad:
+        print(f"<details><summary>{kind}: <code>{test_id}</code></summary>\n")
+        print("```")
+        print(msg)
+        print("```\n</details>\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "pytest-junit.xml"))

@@ -1,13 +1,23 @@
 """Core library: the paper's accumulation-of-sub-sampling sketching framework."""
 from repro.core.sketch import (
     AccumSketch,
+    AccumState,
+    append_subsample,
     make_accum_sketch,
+    make_accum_sketch_jit,
     make_gaussian_sketch,
     make_nystrom_sketch,
     make_sparse_rp,
 )
 from repro.core.apply import (
+    accum_grow,
+    accum_grow_adaptive,
+    accum_init,
+    accum_step,
     gram_sketch,
+    grow_sketch_both,
+    make_holdout_estimator,
+    make_hutchinson_estimator,
     sketch_both,
     sketch_kernel_cols,
     sketch_left,
@@ -22,9 +32,18 @@ from repro.core.krr import (
     krr_exact_fit,
     krr_exact_fitted,
     krr_sketched_fit,
+    krr_sketched_fit_adaptive,
     krr_sketched_fit_dense,
     krr_sketched_fit_matfree,
     krr_sketched_fit_pcg,
+    krr_sketched_fit_pcg_adaptive,
+)
+from repro.core.spectral import (
+    SpectralResult,
+    kmeans,
+    nystrom_eigh,
+    sketched_spectral_embedding,
+    spectral_cluster,
 )
 from repro.core.kernels_math import gaussian_kernel, get_kernel, laplacian_kernel, matern_kernel
 from repro.core.leverage import (

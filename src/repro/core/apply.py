@@ -8,13 +8,29 @@ The identities (paper §3.3):
 Because each S_(i) has one non-zero per column, K S_(i) is a signed/rescaled
 column gather of K, and S_(i)ᵀ M is a signed/rescaled row gather of M.
 None of these routines materializes S.
+
+The PROGRESSIVE ACCUMULATION ENGINE (``accum_init`` / ``accum_step`` /
+``accum_grow`` / ``accum_grow_adaptive`` / ``grow_sketch_both``) turns the
+one-shot sketch into the paper's actual strategy: grow m step-by-step,
+folding one new sub-sampling matrix into the running (C, W) with a rank-d
+incremental update,
+
+    S_{m+1} = sqrt(m/(m+1))·S_m + T̃_{m+1}
+    C_{m+1} = sqrt(m/(m+1))·C_m + K T̃_{m+1}             (one column gather)
+    W_{m+1} = (m/(m+1))·W_m + a·(T̃ᵀC_m + C_mᵀT̃) + T̃ᵀK T̃  (row gathers)
+
+at O(n·d) per step instead of the O(n·m·d) from-scratch recompute — so a
+cheap sampling distribution (uniform / approximate leverage) can buy accuracy
+by growing m until a plug-in error estimate clears the caller's tolerance.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sketch import AccumSketch
+from repro.core.sketch import AccumSketch, AccumState, make_accum_sketch
 from repro.util import env_flag
 
 
@@ -97,6 +113,173 @@ def gram_sketch(sk: AccumSketch) -> jax.Array:
                           fill_value=-1)
     B = jnp.zeros((idx.shape[0], sk.d), cf.dtype).at[ranks, col].add(cf)
     return B.T @ B
+
+
+# --------------------------------------------------------------------------- #
+# Progressive accumulation engine
+# --------------------------------------------------------------------------- #
+
+def _psd_apply_pinv(W: jax.Array, B: jax.Array, jitter: float = 1e-6) -> jax.Array:
+    """W⁺ B for PSD W via trace-scaled jitter + Cholesky (d×d, cheap)."""
+    d = W.shape[0]
+    eps = jitter * (jnp.trace(W) / d) + 1e-30
+    L, lower = jax.scipy.linalg.cho_factor(
+        W + eps * jnp.eye(d, dtype=W.dtype), lower=True)
+    return jax.scipy.linalg.cho_solve((L, lower), B)
+
+
+def accum_init(key: jax.Array, n: int, d: int, m_max: int,
+               probs: jax.Array | None = None, *, signed: bool = True) -> AccumState:
+    """Draw all ``m_max`` sub-sampling matrices up front (same RNG scheme as
+    ``make_accum_sketch``, so growing to m_max replays the one-shot draw at
+    m_max exactly; a stop at m < m_max yields a prefix of that draw) and
+    return the empty accumulation state."""
+    sk = make_accum_sketch(key, n, d, m_max, probs, signed=signed)
+    return AccumState(
+        indices=sk.indices, signs=sk.signs, probs=sk.probs,
+        C=jnp.zeros((n, d), jnp.float32), W=jnp.zeros((d, d), jnp.float32),
+        m=jnp.zeros((), jnp.int32), err=jnp.full((), jnp.inf, jnp.float32),
+        n=n,
+    )
+
+
+def accum_step(K: jax.Array, state: AccumState, *,
+               use_kernel: bool | None = None) -> AccumState:
+    """Fold ONE new sub-sampling matrix into (C, W): the rank-d incremental
+    update, O(n·d) per step.
+
+    With ``use_kernel`` (auto: True on TPU) the C update runs through the
+    single-slab Pallas entry point (``sketch_step_kernel``) so the increment's
+    gather→GEMM hits the MXU; the W pieces are d×d gathers either way."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    t = state.m
+    tf = t.astype(jnp.float32)
+    d = state.d
+    idx_new = jax.lax.dynamic_index_in_dim(state.indices, t, axis=0, keepdims=False)
+    sgn_new = jax.lax.dynamic_index_in_dim(state.signs, t, axis=0, keepdims=False)
+    p_new = jnp.take(state.probs, idx_new).astype(jnp.float32)
+    # T̃ is normalized for the grown size m = t+1: coef = r / sqrt(d (t+1) p)
+    coef_new = sgn_new.astype(jnp.float32) / jnp.sqrt(d * (tf + 1.0) * p_new)
+    a = jnp.sqrt(tf / (tf + 1.0))                      # t=0 → 0: C_1 = K T̃_1
+
+    # W update from d×d gathers only:  T̃ᵀC_t and (T̃ᵀK T̃)[i,j] = c_i K[n_i,n_j] c_j
+    TtC = coef_new[:, None] * jnp.take(state.C, idx_new, axis=0)
+    Ksub = jnp.take(jnp.take(K, idx_new, axis=0), idx_new, axis=1)
+    TtKT = coef_new[:, None] * Ksub.astype(jnp.float32) * coef_new[None, :]
+    W_new = (a * a) * state.W + a * (TtC + TtC.T) + TtKT
+    W_new = 0.5 * (W_new + W_new.T)                    # exact-arithmetic symmetry
+
+    if use_kernel:
+        from repro.kernels.accum_apply.ops import sketch_step_kernel
+        C_new = sketch_step_kernel(K, idx_new, coef_new, state.C, a)
+    else:
+        G = jnp.take(K, idx_new, axis=1).astype(jnp.float32) * coef_new[None, :]
+        C_new = a * state.C + G
+    return dataclasses.replace(state, C=C_new, W=W_new, m=t + 1)
+
+
+def accum_grow(K: jax.Array, state: AccumState, steps: int, *,
+               use_kernel: bool | None = None) -> AccumState:
+    """Unconditionally fold in ``steps`` more slabs (``lax.fori_loop``)."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+
+    def body(_, s):
+        return accum_step(K, s, use_kernel=use_kernel)
+
+    return jax.lax.fori_loop(0, steps, body, state)
+
+
+def make_holdout_estimator(key: jax.Array, K: jax.Array, num: int = 64,
+                           *, jitter: float = 1e-6):
+    """Plug-in stopping rule: relative Nyström-reconstruction error of the
+    sketched operator K̂ = C W⁺ Cᵀ on a fixed random holdout principal
+    submatrix — O(h²·d + d³) per evaluation, independent of n."""
+    n = K.shape[0]
+    hold = jax.random.choice(key, n, shape=(min(num, n),), replace=False)
+    Kh = jnp.take(jnp.take(K, hold, axis=0), hold, axis=1).astype(jnp.float32)
+    denom = jnp.maximum(jnp.linalg.norm(Kh), 1e-30)
+
+    def estimate(state: AccumState) -> jax.Array:
+        Ch = jnp.take(state.C, hold, axis=0)
+        Khat = Ch @ _psd_apply_pinv(state.W, Ch.T, jitter)
+        est = jnp.linalg.norm(Kh - Khat) / denom
+        return jnp.where(jnp.isfinite(est), est, jnp.inf).astype(jnp.float32)
+
+    return estimate
+
+
+def make_hutchinson_estimator(key: jax.Array, K: jax.Array, num_probes: int = 8,
+                              *, jitter: float = 1e-6):
+    """Plug-in stopping rule: Hutchinson estimate of the relative trace
+    residual tr(K − K̂)/tr̂(K) with Rademacher probes.  K Z is precomputed once
+    (K is fixed while m grows), so each evaluation costs O(n·d·q + d³).  The
+    Nyström residual of a PSD K is PSD, so the estimate is a true error."""
+    n = K.shape[0]
+    Z = jax.random.rademacher(key, (n, num_probes), dtype=jnp.float32)
+    KZ = K.astype(jnp.float32) @ Z                     # one-time O(n²·q)
+    zKz = jnp.einsum("nq,nq->q", Z, KZ)
+    denom = jnp.maximum(jnp.mean(zKz), 1e-30)
+
+    def estimate(state: AccumState) -> jax.Array:
+        CtZ = state.C.T @ Z                            # (d, q) — O(n·d·q)
+        zKhatz = jnp.einsum("dq,dq->q", CtZ, _psd_apply_pinv(state.W, CtZ, jitter))
+        est = jnp.maximum(jnp.mean(zKz - zKhatz), 0.0) / denom
+        return jnp.where(jnp.isfinite(est), est, jnp.inf).astype(jnp.float32)
+
+    return estimate
+
+
+def accum_grow_adaptive(K: jax.Array, state: AccumState, *, tol: float,
+                        estimator, check_every: int = 1,
+                        use_kernel: bool | None = None) -> AccumState:
+    """Grow until ``estimator(state) ≤ tol`` or the pre-drawn ``m_max`` slabs
+    are exhausted (``lax.while_loop``).  ``estimator`` maps AccumState → scalar
+    error; ``check_every > 1`` amortizes its cost over several growth steps."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    m_max = state.m_max
+
+    def cond(s):
+        return jnp.logical_and(s.m < m_max, s.err > tol)
+
+    def body(s):
+        s = accum_step(K, s, use_kernel=use_kernel)
+        do_check = jnp.logical_or(s.m % check_every == 0, s.m >= m_max)
+        err = jax.lax.cond(do_check, estimator, lambda st: st.err, s)
+        return dataclasses.replace(s, err=err)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def grow_sketch_both(
+    key: jax.Array, K: jax.Array, d: int, *, m_max: int = 32,
+    tol: float | None = None, probs: jax.Array | None = None,
+    signed: bool = True, estimator=None, check_every: int = 1,
+    use_kernel: bool | None = None,
+) -> tuple[AccumSketch, jax.Array, jax.Array, dict]:
+    """One-call driver: grow a sketch on a precomputed K until the error
+    target is met (or to m_max when ``tol`` is None) and return
+    ``(sketch, C, W, info)`` with C = K S, W = SᵀKS at the final m.
+
+    Callers specify an error target instead of m — the paper's rescue of
+    suboptimal (uniform / approximate-leverage) sampling schemes: grow m,
+    keep the effective d×d size fixed.  ``estimator`` defaults to the holdout
+    rule; pass ``make_hutchinson_estimator(...)`` (or any AccumState → scalar
+    callable) to swap the plug-in rule."""
+    n = K.shape[0]
+    state = accum_init(key, n, d, m_max, probs, signed=signed)
+    if tol is None:
+        state = accum_grow(K, state, m_max, use_kernel=use_kernel)
+    else:
+        if estimator is None:
+            estimator = make_holdout_estimator(jax.random.fold_in(key, 0x5E1D), K)
+        state = accum_grow_adaptive(K, state, tol=tol, estimator=estimator,
+                                    check_every=check_every,
+                                    use_kernel=use_kernel)
+    info = {"m": int(state.m), "m_max": m_max, "err": float(state.err)}
+    return state.sketch(), state.C, state.W, info
 
 
 def sketch_kernel_cols(

@@ -3,10 +3,14 @@
 Exact:     f̂(x)   = K(x, X) (K + nλ I)⁻¹ Y
 Sketched:  f̂_S(x) = K(x, X) S (SᵀK²S + nλ SᵀKS)⁻¹ SᵀK Y        (Woodbury form)
 
-Three application paths:
+Four application paths:
   * dense sketch S (Gaussian / sparse RP baselines)          — O(n²d)
   * structural AccumSketch on a precomputed K                — O(n·m·d)
   * matrix-free AccumSketch straight from X (never forms K)  — O(n·m·d) kernel evals
+  * adaptive (``*_adaptive``): the progressive accumulation engine grows m
+    one O(n·d) incremental slab at a time until a plug-in error estimate
+    clears the caller's tolerance, and the solve reuses the incrementally
+    accumulated (C, W)
 """
 from __future__ import annotations
 
@@ -66,6 +70,7 @@ class SketchedKRR:
     X_train: jax.Array | None
     kernel_fn: Callable | None
     fitted: jax.Array                  # in-sample f̂_S(X) (n,)
+    info: dict | None = None           # adaptive-fit stats {"m", "err", ...}
 
     def predict(self, X_test: jax.Array) -> jax.Array:
         assert self.X_train is not None and self.kernel_fn is not None
@@ -136,6 +141,27 @@ def krr_sketched_fit_matfree(
     return SketchedKRR(theta, sk, None, X, kernel_fn, fitted)
 
 
+def _pcg_solve(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
+               iters: int) -> jax.Array:
+    """Preconditioned CG on the Woodbury system (CᵀC + nλ W) θ = Cᵀy with the
+    Cholesky of (W + jitter) as preconditioner.  Never materializes CᵀC."""
+    n, d = C.shape
+    jitter = 1e-8 * (jnp.trace(W) / d + 1e-30)
+    L, lower = jax.scipy.linalg.cho_factor(
+        W + jitter * jnp.eye(d, dtype=W.dtype), lower=True)
+
+    def matvec(t):
+        return C.T @ (C @ t) + n * lam * (W @ t)
+
+    def precond(r):
+        # (nλ W)⁻¹ ≈ the dominant small-eigenvalue part of the operator
+        return jax.scipy.linalg.cho_solve((L, lower), r) / (n * lam)
+
+    rhs = C.T @ y
+    theta, _ = jax.scipy.sparse.linalg.cg(matvec, rhs, M=precond, maxiter=iters)
+    return theta
+
+
 def krr_sketched_fit_pcg(
     X: jax.Array, y: jax.Array, lam: float, sk: AccumSketch, kernel_fn: Callable,
     *, iters: int = 30, chunk: int | None = None,
@@ -154,21 +180,51 @@ def krr_sketched_fit_pcg(
     C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
     W = _sketch_left_routed(sk, C, use_kernel)
     W = 0.5 * (W + W.T)
-    n, d = C.shape
-    jitter = 1e-8 * (jnp.trace(W) / d + 1e-30)
-    L, lower = jax.scipy.linalg.cho_factor(
-        W + jitter * jnp.eye(d, dtype=W.dtype), lower=True)
-
-    def matvec(t):
-        return C.T @ (C @ t) + n * lam * (W @ t)
-
-    def precond(r):
-        # (nλ W)⁻¹ ≈ the dominant small-eigenvalue part of the operator
-        return jax.scipy.linalg.cho_solve((L, lower), r) / (n * lam)
-
-    rhs = C.T @ y
-    theta, _ = jax.scipy.sparse.linalg.cg(matvec, rhs, M=precond, maxiter=iters)
+    theta = _pcg_solve(C, W, y, lam, iters)
     return SketchedKRR(theta, sk, None, X, kernel_fn, C @ theta)
+
+
+# --------------------------------------------------------------------------- #
+# Adaptive (progressive-accumulation) variants
+# --------------------------------------------------------------------------- #
+
+def krr_sketched_fit_adaptive(
+    K: jax.Array, y: jax.Array, lam: float, key: jax.Array, d: int, *,
+    tol: float = 1e-2, m_max: int = 32, probs: jax.Array | None = None,
+    estimator=None, check_every: int = 1,
+    X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
+    use_kernel: bool | None = None,
+) -> SketchedKRR:
+    """Sketched KRR with the sketch size chosen by the progressive engine:
+    grow m one slab at a time (O(n·d) incremental (C, W) updates) until the
+    plug-in error estimate clears ``tol`` or ``m_max`` is reached, then solve
+    the Woodbury system with the (C, W) already accumulated — no recompute.
+
+    This is the paper's rescue of suboptimal sampling: callers specify an
+    error target, not m, and cheap uniform / approximate-leverage
+    probabilities simply buy more slabs."""
+    sk, C, W, info = A.grow_sketch_both(
+        key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
+        check_every=check_every, use_kernel=use_kernel)
+    theta, fitted = _fit_from_C(C, W, y, lam)
+    return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted, info=info)
+
+
+def krr_sketched_fit_pcg_adaptive(
+    K: jax.Array, y: jax.Array, lam: float, key: jax.Array, d: int, *,
+    tol: float = 1e-2, m_max: int = 32, iters: int = 30,
+    probs: jax.Array | None = None, estimator=None, check_every: int = 1,
+    X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
+    use_kernel: bool | None = None,
+) -> SketchedKRR:
+    """Adaptive-m Falkon-style PCG: the progressive engine grows (C, W) to the
+    error target, then CG reuses the incremental pair directly — the d×d
+    preconditioner never changes size while m grows (paper §3.3)."""
+    sk, C, W, info = A.grow_sketch_both(
+        key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
+        check_every=check_every, use_kernel=use_kernel)
+    theta = _pcg_solve(C, W, y, lam, iters)
+    return SketchedKRR(theta, sk, None, X_train, kernel_fn, C @ theta, info=info)
 
 
 def insample_error(f_a: jax.Array, f_b: jax.Array) -> jax.Array:

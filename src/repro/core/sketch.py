@@ -14,6 +14,12 @@ so that  S = sum_i S_(i),  with  (S_(i))[:, j] = r_ij / sqrt(d * m * p_{n_ij}) e
 Special cases:
   m = 1, uniform P, signs ignored  → classical Nyström sub-sampling sketch
   m → ∞                            → sub-Gaussian (Gaussian) sketch by the CLT
+
+Grow API: ``append_subsample`` draws one more sub-sampling matrix (m → m+1,
+survivors rescaled by sqrt(m/(m+1))), ``AccumSketch.truncated`` drops slabs
+with the inverse renormalization, and ``AccumState`` is the pytree the
+progressive accumulation engine (``repro.core.apply``) carries through
+``lax.fori_loop``/``while_loop`` while growing (C, W) incrementally.
 """
 from __future__ import annotations
 
@@ -27,20 +33,30 @@ import jax.numpy as jnp
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class AccumSketch:
-    """Structural representation of an accumulation-of-sub-sampling sketch."""
+    """Structural representation of an accumulation-of-sub-sampling sketch.
+
+    ``coef_`` optionally carries the precomputed (m, d) combination
+    coefficients.  The constructors populate it so hot loops (kernel entry
+    points, PCG iterations, the progressive engine) never re-run the
+    ``jnp.take(probs, indices)`` gather; ``coef`` falls back to computing it
+    for hand-built sketches that leave it ``None``.
+    """
 
     indices: jax.Array  # (m, d) int32
     signs: jax.Array    # (m, d) — ±1
     probs: jax.Array    # (n,) sampling distribution
     n: int              # ambient dimension (rows of S)
+    coef_: jax.Array | None = None  # (m, d) cached r_ij / sqrt(d m p)
 
     # -- pytree plumbing ------------------------------------------------------
     def tree_flatten(self):
-        return (self.indices, self.signs, self.probs), (self.n,)
+        return (self.indices, self.signs, self.probs, self.coef_), (self.n,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, n=aux[0])
+        indices, signs, probs, coef_ = children
+        return cls(indices=indices, signs=signs, probs=probs, n=aux[0],
+                   coef_=coef_)
 
     # -- derived quantities ---------------------------------------------------
     @property
@@ -54,8 +70,31 @@ class AccumSketch:
     @property
     def coef(self) -> jax.Array:
         """(m, d) combination coefficients r_ij / sqrt(d m p_{n_ij})."""
-        p = jnp.take(self.probs, self.indices, axis=0)  # (m, d)
-        return self.signs / jnp.sqrt(self.d * self.m * p)
+        if self.coef_ is not None:
+            return self.coef_
+        return _compute_coef(self.indices, self.signs, self.probs)
+
+    def with_coef(self) -> "AccumSketch":
+        """Copy with ``coef_`` populated (no-op if already cached)."""
+        if self.coef_ is not None:
+            return self
+        return dataclasses.replace(self, coef_=self.coef)
+
+    def truncated(self, m: int) -> "AccumSketch":
+        """The sketch restricted to its first ``m`` sub-sampling matrices.
+
+        The cached coefficients renormalize by sqrt(M/m) — each column's
+        combination coefficient is r / sqrt(d·m·p), so dropping slabs *raises*
+        the weight of the survivors (paper eq. after Alg. 1)."""
+        if not 0 < m <= self.m:
+            raise ValueError(f"cannot truncate m={self.m} sketch to m={m}")
+        if m == self.m:
+            return self
+        coef_ = None
+        if self.coef_ is not None:
+            coef_ = self.coef_[:m] * jnp.sqrt(self.m / m).astype(self.coef_.dtype)
+        return AccumSketch(indices=self.indices[:m], signs=self.signs[:m],
+                           probs=self.probs, n=self.n, coef_=coef_)
 
     def dense(self) -> jax.Array:
         """Materialize S (n, d) — O(n d), for tests/small problems only."""
@@ -66,6 +105,12 @@ class AccumSketch:
         """Number of distinct non-zeros per column (≤ m); density diagnostic."""
         s = self.dense()
         return jnp.sum(s != 0, axis=0)
+
+
+def _compute_coef(indices: jax.Array, signs: jax.Array, probs: jax.Array) -> jax.Array:
+    m, d = indices.shape
+    p = jnp.take(probs, indices, axis=0)  # (m, d)
+    return signs / jnp.sqrt(d * m * p)
 
 
 def make_accum_sketch(
@@ -95,7 +140,31 @@ def make_accum_sketch(
         signs = jax.random.rademacher(ksgn, (m, d), dtype=dtype)
     else:
         signs = jnp.ones((m, d), dtype=dtype)
-    return AccumSketch(indices=indices.astype(jnp.int32), signs=signs, probs=probs, n=n)
+    indices = indices.astype(jnp.int32)
+    return AccumSketch(indices=indices, signs=signs, probs=probs, n=n,
+                       coef_=_compute_coef(indices, signs, probs))
+
+
+def append_subsample(sk: AccumSketch, key: jax.Array, *, signed: bool = True) -> AccumSketch:
+    """Grow a sketch m → m+1 by drawing ONE new sub-sampling matrix from the
+    same distribution P — the paper's accumulation step.
+
+    The survivors' cached coefficients rescale by sqrt(m/(m+1)) (each column's
+    normalization is 1/sqrt(d·m·p)), so S_{m+1} = sqrt(m/(m+1))·S_m + T_{m+1}.
+    The grown sketch is a fresh draw, not a prefix of any single-key
+    ``make_accum_sketch`` — use ``AccumState``/``accum_grow`` when the
+    step-by-step trajectory must replay a one-shot construction exactly."""
+    kidx, ksgn = jax.random.split(key)
+    idx_new = jax.random.choice(kidx, sk.n, shape=(1, sk.d), replace=True,
+                                p=sk.probs).astype(jnp.int32)
+    if signed:
+        sgn_new = jax.random.rademacher(ksgn, (1, sk.d), dtype=sk.signs.dtype)
+    else:
+        sgn_new = jnp.ones((1, sk.d), dtype=sk.signs.dtype)
+    indices = jnp.concatenate([sk.indices, idx_new], axis=0)
+    signs = jnp.concatenate([sk.signs, sgn_new], axis=0)
+    return AccumSketch(indices=indices, signs=signs, probs=sk.probs, n=sk.n,
+                       coef_=_compute_coef(indices, signs, sk.probs))
 
 
 def make_nystrom_sketch(key, n, d, probs=None, dtype=jnp.float32) -> AccumSketch:
@@ -124,13 +193,76 @@ def make_sparse_rp(key, n, d, s: float | None = None, dtype=jnp.float32) -> jax.
     return sgn * mask * jnp.sqrt(s / d).astype(dtype)
 
 
-@partial(jax.jit, static_argnames=("n", "d", "m", "signed"))
-def _jit_make(key, n, d, m, probs, signed):
-    return make_accum_sketch(key, n, d, m, probs, signed=signed)
+@partial(jax.jit, static_argnames=("n", "d", "m", "signed", "dtype"))
+def _jit_make(key, n, d, m, probs, signed, dtype):
+    return make_accum_sketch(key, n, d, m, probs, signed=signed, dtype=dtype)
 
 
-def make_accum_sketch_jit(key, n, d, m=1, probs=None, signed=True) -> AccumSketch:
-    """jit'd constructor (probs must be a concrete array or None)."""
+def make_accum_sketch_jit(key, n, d, m=1, probs=None, signed=True,
+                          dtype=jnp.float32) -> AccumSketch:
+    """jit'd constructor (probs must be a concrete array or None).
+
+    ``dtype`` propagates to signs/probs/coef exactly as in the eager
+    constructor (the seed version silently pinned float32)."""
     if probs is None:
-        probs = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
-    return _jit_make(key, n, d, m, probs, signed)
+        probs = jnp.full((n,), 1.0 / n, dtype=dtype)
+    return _jit_make(key, n, d, m, probs, signed, jnp.dtype(dtype).name)
+
+
+# --------------------------------------------------------------------------- #
+# Progressive accumulation state
+# --------------------------------------------------------------------------- #
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AccumState:
+    """State of the progressive accumulation engine after ``m`` steps.
+
+    Carried through ``lax.fori_loop``/``lax.while_loop`` by
+    ``repro.core.apply.accum_grow``/``accum_grow_adaptive``: all m_max
+    sub-sampling matrices are pre-drawn (same RNG scheme as
+    ``make_accum_sketch``, so growing all the way to m_max replays
+    ``make_accum_sketch(key, n, d, m_max)`` bit-for-bit; intermediate m are a
+    prefix of THAT draw, not of a one-shot draw at m), and each step folds
+    slab ``m`` into the running, *currently normalized* accumulators
+
+        C = K S_m   (n, d)      W = S_mᵀ K S_m   (d, d)
+
+    in O(n·d) — one column gather of K plus a rescale — instead of the
+    O(n·m·d) from-scratch recompute per candidate m.  ``err`` holds the latest
+    value of the plug-in stopping estimate (+inf until first evaluated).
+    """
+
+    indices: jax.Array   # (m_max, d) int32 — rows ≥ m not yet accumulated
+    signs: jax.Array     # (m_max, d)
+    probs: jax.Array     # (n,)
+    C: jax.Array         # (n, d) float32 running K S_m
+    W: jax.Array         # (d, d) float32 running Sᵀ K S_m
+    m: jax.Array         # () int32 — number of slabs folded in so far
+    err: jax.Array       # () float32 — latest stopping-rule estimate
+    n: int               # static ambient dimension
+
+    def tree_flatten(self):
+        return (self.indices, self.signs, self.probs, self.C, self.W,
+                self.m, self.err), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n=aux[0])
+
+    @property
+    def m_max(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.indices.shape[1]
+
+    def sketch(self) -> AccumSketch:
+        """The AccumSketch accumulated so far (host-side: m must be concrete)."""
+        m = int(self.m)
+        if m == 0:
+            raise ValueError("no sub-sampling matrices accumulated yet")
+        full = AccumSketch(indices=self.indices, signs=self.signs,
+                           probs=self.probs, n=self.n)
+        return full.truncated(m).with_coef()

@@ -1,0 +1,208 @@
+"""Sketched eigendecomposition and spectral clustering — the paper's second
+flagship application (§4/§5, alongside KRR).
+
+Everything here runs off the pair
+
+    C = K S   (n, d)        W = Sᵀ K S   (d, d)
+
+produced either by the fused one-sweep kernel path (``apply.sketch_both``) or
+by the progressive accumulation engine (``apply.grow_sketch_both``), so no
+routine ever pays more than O(n·d²) after the sketch:
+
+  * ``nystrom_eigh`` — eigenpairs of the sketched operator K̂ = C W⁺ Cᵀ via
+    the Nyström-style lift B = C W^{-1/2}: K̂ = B Bᵀ, so an SVD of the THIN
+    (n, d) matrix B gives eigenvectors U and eigenvalues Σ² of K̂ directly.
+  * ``sketched_spectral_embedding`` — the (optionally degree-normalized)
+    top-k eigenvector embedding; the degree vector D = K̂ 1 = C (W⁺ (Cᵀ 1))
+    also costs only O(n·d).
+  * ``kmeans`` — a jit-compiled Lloyd solver with k-means++ seeding and
+    restarts (used for the final assignment step).
+  * ``spectral_cluster`` — the full pipeline; pass a fixed ``m`` or an error
+    target ``tol`` to let the progressive engine choose m.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apply as A
+from repro.core.sketch import AccumSketch, make_accum_sketch
+
+
+# --------------------------------------------------------------------------- #
+# Sketched eigendecomposition
+# --------------------------------------------------------------------------- #
+
+def _w_pinv_factors(W: jax.Array, eps: float) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(U, λ⁺, λ^{-1/2}) of PSD W with eigenvalues below ``eps``·max zeroed.
+
+    One d×d eigh shared by the degree vector and the eigenvector lift.
+    (The progressive engine's ``apply._psd_apply_pinv`` deliberately uses
+    Cholesky + jitter instead: it runs inside ``lax.while_loop`` where a full
+    eigh per growth step would dominate; here W may be genuinely
+    rank-deficient and the pseudo-inverse branch matters.)"""
+    w, U = jnp.linalg.eigh(0.5 * (W + W.T))
+    good = w > eps * (jnp.maximum(jnp.max(w), 0.0) + 1e-30)
+    safe = jnp.where(good, w, 1.0)
+    inv = jnp.where(good, 1.0 / safe, 0.0)
+    inv_sqrt = jnp.where(good, 1.0 / jnp.sqrt(safe), 0.0)
+    return U, inv, inv_sqrt
+
+
+def nystrom_eigh(C: jax.Array, W: jax.Array, k: int | None = None,
+                 *, eps: float = 1e-7, w_factors=None) -> tuple[jax.Array, jax.Array]:
+    """Top-k eigenpairs of the sketched operator K̂ = C W⁺ Cᵀ.
+
+    W = UΛU⁺ gives the lift B = C W^{-1/2} = C U Λ^{-1/2} Uᵀ with K̂ = B Bᵀ;
+    the thin SVD B = P Σ Qᵀ then yields K̂ = P Σ² Pᵀ — eigenvalues Σ² and
+    orthonormal eigenvectors P at O(n·d²) cost.  Eigenvalues of W below
+    ``eps``·max are treated as zero (pseudo-inverse branch).  ``w_factors``
+    accepts a precomputed ``_w_pinv_factors(W, eps)`` to share the eigh.
+
+    Returns (eigvals (k,), eigvecs (n, k)) in DESCENDING eigenvalue order.
+    """
+    d = W.shape[0]
+    k = d if k is None else k
+    U, _, inv_sqrt = w_factors if w_factors is not None else _w_pinv_factors(W, eps)
+    B = (C @ U) * inv_sqrt[None, :]                    # C W^{-1/2} (n, d)
+    P, s, _ = jnp.linalg.svd(B, full_matrices=False)   # descending s
+    return (s[:k] ** 2), P[:, :k]
+
+
+def sketched_degrees(C: jax.Array, W: jax.Array, *, eps: float = 1e-7,
+                     w_factors=None) -> jax.Array:
+    """Degree vector of the sketched affinity, D = K̂ 1 = C (W⁺ (Cᵀ 1)) — O(n·d)."""
+    U, inv, _ = w_factors if w_factors is not None else _w_pinv_factors(W, eps)
+    v = jnp.sum(C, axis=0)                             # Cᵀ 1 (d,)
+    return C @ (U @ (inv * (U.T @ v)))
+
+
+def sketched_spectral_embedding(
+    C: jax.Array, W: jax.Array, k: int, *, normalized: bool = True,
+    eps: float = 1e-7,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k spectral embedding of the sketched affinity K̂ = C W⁺ Cᵀ.
+
+    ``normalized`` (default) embeds with the normalized affinity
+    D^{-1/2} K̂ D^{-1/2} (Ng–Jordan–Weiss): D comes from ``sketched_degrees``
+    and folds into C — the operator stays in Nyström form, so the lift is
+    still an (n, d) SVD and W (hence its one shared eigh) is unchanged.
+    Returns (eigvals (k,), embedding (n, k))."""
+    factors = _w_pinv_factors(W, eps)
+    if normalized:
+        deg = sketched_degrees(C, W, eps=eps, w_factors=factors)
+        dinv = 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12))
+        C = C * dinv[:, None]
+    return nystrom_eigh(C, W, k, eps=eps, w_factors=factors)
+
+
+# --------------------------------------------------------------------------- #
+# k-means (Lloyd + k-means++ seeding, jit-compiled)
+# --------------------------------------------------------------------------- #
+
+def _sqdist(X: jax.Array, C: jax.Array) -> jax.Array:
+    x2 = jnp.sum(X * X, axis=1)[:, None]
+    c2 = jnp.sum(C * C, axis=1)[None, :]
+    return jnp.maximum(x2 + c2 - 2.0 * X @ C.T, 0.0)
+
+
+def _kmeanspp_init(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
+    n = X.shape[0]
+    first = jax.random.choice(key, n)
+    centers = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[first])
+    d2min = jnp.sum((X - X[first][None, :]) ** 2, axis=1)
+
+    def body(i, carry):
+        centers, d2min = carry
+        p = d2min / jnp.maximum(jnp.sum(d2min), 1e-30)
+        nxt = jax.random.choice(jax.random.fold_in(key, i), n, p=p)
+        centers = centers.at[i].set(X[nxt])
+        d2min = jnp.minimum(d2min, jnp.sum((X - X[nxt][None, :]) ** 2, axis=1))
+        return centers, d2min
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers, d2min))
+    return centers
+
+
+@partial(jax.jit, static_argnames=("k", "iters", "restarts"))
+def kmeans(key: jax.Array, X: jax.Array, k: int, *, iters: int = 25,
+           restarts: int = 4) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Lloyd's algorithm with k-means++ seeding and ``restarts`` independent
+    runs (best inertia wins).  Returns (labels (n,), centers (k, p), inertia)."""
+
+    def one_run(key):
+        c0 = _kmeanspp_init(key, X, k)
+
+        def step(_, c):
+            lab = jnp.argmin(_sqdist(X, c), axis=1)
+            onehot = jax.nn.one_hot(lab, k, dtype=X.dtype)
+            counts = jnp.sum(onehot, axis=0)
+            sums = onehot.T @ X
+            return jnp.where(counts[:, None] > 0, sums / jnp.maximum(
+                counts, 1.0)[:, None], c)
+
+        c = jax.lax.fori_loop(0, iters, step, c0)
+        inertia = jnp.sum(jnp.min(_sqdist(X, c), axis=1))
+        return c, inertia
+
+    centers_all, inertia_all = jax.lax.map(one_run, jax.random.split(key, restarts))
+    best = jnp.argmin(inertia_all)
+    centers = centers_all[best]
+    labels = jnp.argmin(_sqdist(X, centers), axis=1)
+    return labels, centers, inertia_all[best]
+
+
+# --------------------------------------------------------------------------- #
+# Full pipeline
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class SpectralResult:
+    """Output of ``spectral_cluster``."""
+
+    labels: jax.Array       # (n,) int cluster assignments
+    eigvals: jax.Array      # (k,) top sketched eigenvalues (descending)
+    embedding: jax.Array    # (n, k) row-normalized spectral embedding
+    sketch: AccumSketch     # the sketch that produced (C, W)
+    info: dict              # {"m": ..., "err": ...} — engine stats
+
+
+def spectral_cluster(
+    key: jax.Array, K: jax.Array, n_clusters: int, *, d: int,
+    m: int | None = None, tol: float | None = None, m_max: int = 32,
+    probs: jax.Array | None = None, normalized: bool = True,
+    use_kernel: bool | None = None, kmeans_restarts: int = 4,
+    kmeans_iters: int = 25,
+) -> SpectralResult:
+    """Sketched spectral clustering of the affinity matrix K.
+
+    Pipeline: sketch → (C, W) → top-``n_clusters`` eigenvector embedding of
+    the (normalized) sketched affinity → row-normalize → k-means.  Exactly one
+    of ``m`` (fixed sketch size, fused ``sketch_both`` kernel path) or ``tol``
+    (error target, progressive accumulation engine picks m ≤ m_max) should be
+    given; ``m=None, tol=None`` defaults to the fixed fused path at m=m_max.
+    """
+    ksk, kkm = jax.random.split(key)
+    if tol is not None:
+        if m is not None:
+            raise ValueError("pass either m= or tol=, not both")
+        sk, C, W, info = A.grow_sketch_both(
+            ksk, K, d, m_max=m_max, tol=tol, probs=probs, use_kernel=use_kernel)
+    else:
+        sk = make_accum_sketch(ksk, K.shape[0], d, m_max if m is None else m,
+                               probs)
+        C, W = A.sketch_both(K, sk, use_kernel=use_kernel)
+        info = {"m": sk.m, "m_max": m_max, "err": float("nan")}
+    eigvals, U = sketched_spectral_embedding(
+        C.astype(jnp.float32), W.astype(jnp.float32), n_clusters,
+        normalized=normalized)
+    # row-normalize (NJW step 4): points live on the unit sphere of the
+    # eigenspace, so k-means separates angular structure
+    emb = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
+    labels, _, _ = kmeans(kkm, emb, n_clusters, iters=kmeans_iters,
+                          restarts=kmeans_restarts)
+    return SpectralResult(labels=labels, eigvals=eigvals, embedding=emb,
+                          sketch=sk, info=info)

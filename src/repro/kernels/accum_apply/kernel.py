@@ -199,6 +199,58 @@ def accum_sketch_both(
 
 
 # --------------------------------------------------------------------------- #
+# single-slab progressive step — C ← a·C + K·T̃ in one fused pass
+# --------------------------------------------------------------------------- #
+
+def _step_kernel(idx_ref, coef_ref, a_ref, K_ref, Cin_ref, out_ref, *, bd: int):
+    j0 = pl.program_id(1) * bd
+    sblk = _coef_block(idx_ref, coef_ref, base=0, nrows=K_ref.shape[1],
+                       j0=j0, ncols=bd, m=1)                       # (N, bd)
+    g = jax.lax.dot_general(
+        K_ref[...].astype(jnp.float32), sblk,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                              # (bm, bd)
+    rescaled = a_ref[0].astype(jnp.float32) * Cin_ref[...].astype(jnp.float32)
+    out_ref[...] = (rescaled + g).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "interpret"))
+def accum_step_slab(
+    K: jax.Array, idx: jax.Array, coef: jax.Array, Cin: jax.Array,
+    a: jax.Array, *, bm: int = 256, bd: int = 64, interpret: bool = True,
+) -> jax.Array:
+    """One progressive-accumulation increment: a·Cin + K·T̃ for a SINGLE
+    sub-sampling slab (idx/coef of shape (1, d), rescale scalar ``a`` of
+    shape (1,) riding in SMEM via scalar prefetch).
+
+    Same gather→GEMM formulation as ``accum_apply`` (the m=1 one-hot block
+    feeds the MXU) with the running C's rescale fused into the tile write, so
+    the engine's m → m+1 step is one kernel launch and one read of C."""
+    R, N = K.shape
+    _, d = idx.shape
+    bm = min(bm, R)
+    bd = min(bd, d)
+    assert R % bm == 0 and d % bd == 0, (R, bm, d, bd)
+    assert Cin.shape == (R, d), (Cin.shape, R, d)
+    grid = (R // bm, d // bd)
+    return pl.pallas_call(
+        functools.partial(_step_kernel, bd=bd),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,             # idx, coef, a in SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, N), lambda r, j, *_: (r, 0)),
+                pl.BlockSpec((bm, bd), lambda r, j, *_: (r, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bd), lambda r, j, *_: (r, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, d), Cin.dtype),
+        interpret=interpret,
+    )(idx, coef, a, K, Cin)
+
+
+# --------------------------------------------------------------------------- #
 # seed scalar-gather kernel — kept as the benchmark baseline
 # --------------------------------------------------------------------------- #
 

@@ -13,7 +13,10 @@ This layer makes the kernels shape- and backend-agnostic:
     O(1) in the number of chunks — the seed's Python loop unrolled one
     pallas_call per chunk under jit;
   * ``sketch_both_kernel`` exposes the fused (K S, SᵀK S) single-sweep kernel,
-    ``sketch_left_kernel`` applies Sᵀ via the same GEMM kernel on Mᵀ.
+    ``sketch_left_kernel`` applies Sᵀ via the same GEMM kernel on Mᵀ;
+  * ``sketch_step_kernel`` is the single-slab accumulate entry point used by
+    the progressive engine: a·C + K·T̃ in one fused launch (MXU path for the
+    m → m+1 increment).
 """
 from __future__ import annotations
 
@@ -21,7 +24,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sketch import AccumSketch
-from repro.kernels.accum_apply.kernel import accum_apply, accum_sketch_both
+from repro.kernels.accum_apply.kernel import (
+    accum_apply,
+    accum_sketch_both,
+    accum_step_slab,
+)
 from repro.util import env_flag
 
 MAX_COLS = 8192   # per-chunk K columns: bm·MAX_COLS·4B ≤ ~8MB VMEM at bm=256
@@ -142,6 +149,51 @@ def sketch_left_kernel(
 ) -> jax.Array:
     """Sᵀ M (d, c) through the same GEMM kernel: Sᵀ M = (Mᵀ S)ᵀ."""
     return sketch_right_kernel(M.T, sk, bm=bm, bd=bd, interpret=interpret).T
+
+
+def sketch_step_kernel(
+    K: jax.Array, idx_row: jax.Array, coef_row: jax.Array, C: jax.Array,
+    a: jax.Array, *, bm: int | None = None, bd: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-slab accumulate entry point: a·C + K·T̃ for one sub-sampling
+    matrix described by ``idx_row``/``coef_row`` of shape (d,).
+
+    The progressive engine's m → m+1 increment routes here so the column
+    gather hits the MXU gather→GEMM path with the running C's rescale fused
+    in.  Arbitrary shapes are padded to the block grid and sliced back; K
+    wider than ``MAX_COLS`` falls back to the chunk-scanned ``accum_apply``
+    for the gather and applies the rescale outside the kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    R, N = K.shape
+    d = idx_row.shape[0]
+    a_bm, a_bd = autotune_blocks(R, N, d, 1, K.dtype)
+    bm = a_bm if bm is None else bm
+    bd = a_bd if bd is None else bd
+    coef32 = coef_row.astype(jnp.float32)
+    a_arr = jnp.asarray(a, jnp.float32).reshape((1,))
+    if N > MAX_COLS:
+        # chunk-scan path: reuse the wide-K machinery on a one-slab sketch
+        one = AccumSketch(
+            indices=idx_row[None, :].astype(jnp.int32),
+            signs=jnp.sign(coef32)[None, :], probs=jnp.full((N,), 1.0 / N,
+                                                            jnp.float32),
+            n=N, coef_=coef32[None, :])
+        G = sketch_right_kernel(K, one, bm=bm, bd=bd, interpret=interpret)
+        return a_arr[0] * C + G.astype(C.dtype)
+    bm_e = min(bm, R)
+    bd_e = min(bd, d)
+    Kp = _pad_rows(K, bm_e)
+    Cp = _pad_rows(C, bm_e)
+    idx_p, coef_p = _pad_sketch(idx_row[None, :].astype(jnp.int32),
+                                coef32[None, :], bd_e)
+    dpad = idx_p.shape[1] - d
+    if dpad:
+        Cp = jnp.pad(Cp, ((0, 0), (0, dpad)))
+    out = accum_step_slab(Kp, idx_p, coef_p, Cp, a_arr, bm=bm_e, bd=bd_e,
+                          interpret=interpret)
+    return out[:R, :d]
 
 
 def autotune_both_blocks(n: int, interpret: bool) -> tuple[int, int]:

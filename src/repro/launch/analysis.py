@@ -166,16 +166,11 @@ class HloModule:
         for comp, instrs in self.comps.items():
             for ins in instrs:
                 factor = self._trip_count(ins) if ins.op == "while" else 1.0
-                cond_name = None
-                if ins.op == "while":
-                    mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
-                    cond_name = mc.group(1) if mc else None
                 for target in _call_targets(ins.rest):
                     if target in self.comps:
                         referenced.add(target)
                         # while body AND condition both run ~trip times
                         refs[comp].append((target, factor))
-                del cond_name
         entries = [c for c in self.comps if c not in referenced]
         if self.entry and self.entry not in entries:
             entries.append(self.entry)
@@ -302,7 +297,6 @@ class HloModule:
                 break
         inv = self._invariant_names().get(comp, set())
         named_ops = self._operand_names_types(comp, ins.rest)
-        op_types = [t for _, t in named_ops]
         if body is None:
             b = _shape_bytes(ins.type_str)
             return b + sum(_shape_bytes(t) for nm, t in named_ops if nm not in inv)

@@ -25,7 +25,7 @@ from repro.configs.base import SHAPES
 from repro.launch.analysis import analyze, model_flops
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import make_cell
-from repro.models.model import active_param_count, init_params, param_count
+from repro.models.model import init_params
 from repro.train.step import TrainConfig
 
 
@@ -43,7 +43,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, tc: TrainConfig | N
     mem = compiled.memory_analysis()
     roof = analyze(compiled)
     shape = SHAPES[shape_name]
-    cfg = ARCHS[arch]
     n_active = _active_params(arch)
     n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
     n_chips = 512 if multi_pod else 256

@@ -303,7 +303,6 @@ def decode_step(
     """One decoding step. token_t: (B,) int32; pos: scalar int32 (current index).
 
     Returns (logits (B, V), updated cache). The scan mirrors forward()."""
-    B = token_t.shape[0]
     h = jnp.take(params["embed"], token_t[:, None], axis=0)
     h = h * jnp.sqrt(jnp.asarray(cfg.d_model, h.dtype))
     h = constrain(h, "dp", None, None, policy=cfg.sharding_policy)

@@ -21,7 +21,7 @@ import numpy as np
 from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, global_batch
-from repro.train.step import TrainConfig, TrainState, init_train_state, train_step
+from repro.train.step import TrainConfig, TrainState, train_step
 
 
 @dataclasses.dataclass

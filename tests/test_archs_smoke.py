@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ARCHS, get_config, reduced
 from repro.models import decode_step, forward, init_cache, init_params, output_embedding
-from repro.models.model import loss_fn, param_count
+from repro.models.model import loss_fn
 
 KEY = jax.random.PRNGKey(0)
 ARCH_IDS = list(ARCHS)

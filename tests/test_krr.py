@@ -3,7 +3,6 @@ empirics), leverage scores, incoherence, and K-satisfiability."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     get_kernel,

@@ -1,0 +1,166 @@
+"""Tests for sketched eigendecomposition and spectral clustering
+(``repro.core.spectral``) — the paper's second flagship application.
+"""
+from math import comb
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply as A
+from repro.core.kernels_math import gaussian_kernel
+from repro.core.sketch import make_accum_sketch
+from repro.core.spectral import (
+    kmeans,
+    nystrom_eigh,
+    sketched_degrees,
+    sketched_spectral_embedding,
+    spectral_cluster,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def adjusted_rand_index(a: np.ndarray, b: np.ndarray) -> float:
+    """Adjusted Rand index between two label vectors (exact, small n)."""
+    a, b = np.asarray(a), np.asarray(b)
+    n = a.shape[0]
+    cats_a, cats_b = np.unique(a), np.unique(b)
+    cont = np.array([[np.sum((a == ca) & (b == cb)) for cb in cats_b]
+                     for ca in cats_a])
+    sum_cells = sum(comb(int(x), 2) for x in cont.ravel())
+    sum_rows = sum(comb(int(x), 2) for x in cont.sum(axis=1))
+    sum_cols = sum(comb(int(x), 2) for x in cont.sum(axis=0))
+    total = comb(n, 2)
+    expected = sum_rows * sum_cols / total
+    max_index = 0.5 * (sum_rows + sum_cols)
+    if max_index == expected:
+        return 1.0
+    return float((sum_cells - expected) / (max_index - expected))
+
+
+def _two_block_kernel(n_half: int = 120, sep: float = 2.5, scale: float = 0.4):
+    """Planted 2-block affinity: two well-separated Gaussian clusters."""
+    mu = jnp.array([sep, 0.0])
+    X = jnp.concatenate([
+        jax.random.normal(KEY, (n_half, 2)) * scale - mu,
+        jax.random.normal(jax.random.fold_in(KEY, 1), (n_half, 2)) * scale + mu,
+    ])
+    truth = np.array([0] * n_half + [1] * n_half)
+    return gaussian_kernel(X, X, bandwidth=1.0), truth
+
+
+# --------------------------------------------------------------------------- #
+# sketched eigendecomposition
+# --------------------------------------------------------------------------- #
+
+def test_nystrom_eigh_matches_exact_spectrum():
+    """With a rich sketch the Nyström lift recovers the top eigenpairs."""
+    K, _ = _two_block_kernel(150)
+    n = K.shape[0]
+    sk = make_accum_sketch(KEY, n, 128, m=8)
+    C, W = A.sketch_both(K, sk, use_kernel=False)
+    ev, U = nystrom_eigh(C.astype(jnp.float32), W, 4)
+    ev_exact = jnp.linalg.eigvalsh(K)[::-1][:4]
+    np.testing.assert_allclose(np.asarray(ev), np.asarray(ev_exact), rtol=0.02)
+    # eigenvectors orthonormal and spanning the exact top subspace
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(4), atol=1e-4)
+    _, V = jnp.linalg.eigh(K)
+    s = jnp.linalg.svd(V[:, -4:].T @ U, compute_uv=False)
+    assert float(jnp.mean(s**2)) > 0.99
+
+
+def test_nystrom_eigh_reconstructs_sketched_operator():
+    """U diag(ev) Uᵀ (full k=d) equals the dense K̂ = C W⁺ Cᵀ — the lift
+    algebra including the pseudo-inverse branch on tiny W eigenvalues."""
+    n, d = 120, 16
+    X = jax.random.uniform(jax.random.fold_in(KEY, 2), (n, 3))
+    K = gaussian_kernel(X, X, bandwidth=0.6)
+    sk = make_accum_sketch(KEY, n, d, m=3)
+    C, W = A.sketch_both(K, sk, use_kernel=False)
+    C, W = C.astype(jnp.float32), W.astype(jnp.float32)
+    ev, U = nystrom_eigh(C, W, d)
+    Khat_lift = (U * ev[None, :]) @ U.T
+    Winv = np.linalg.pinv(np.asarray(W), rcond=1e-7)
+    Khat_dense = np.asarray(C) @ Winv @ np.asarray(C).T
+    np.testing.assert_allclose(np.asarray(Khat_lift), Khat_dense,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_sketched_degrees_match_dense():
+    n, d = 100, 12
+    X = jax.random.uniform(jax.random.fold_in(KEY, 3), (n, 2))
+    K = gaussian_kernel(X, X, bandwidth=0.5)
+    sk = make_accum_sketch(KEY, n, d, m=2)
+    C, W = A.sketch_both(K, sk, use_kernel=False)
+    C, W = C.astype(jnp.float32), W.astype(jnp.float32)
+    deg = sketched_degrees(C, W)
+    Winv = np.linalg.pinv(np.asarray(W), rcond=1e-7)
+    deg_dense = np.asarray(C) @ (Winv @ (np.asarray(C).T @ np.ones(n)))
+    np.testing.assert_allclose(np.asarray(deg), deg_dense,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_embedding_shapes_and_normalized_flag():
+    K, _ = _two_block_kernel(60)
+    sk = make_accum_sketch(KEY, K.shape[0], 16, m=2)
+    C, W = A.sketch_both(K, sk, use_kernel=False)
+    for normalized in (True, False):
+        ev, U = sketched_spectral_embedding(
+            C.astype(jnp.float32), W.astype(jnp.float32), 2,
+            normalized=normalized)
+        assert ev.shape == (2,) and U.shape == (K.shape[0], 2)
+        assert bool(jnp.all(jnp.isfinite(U)))
+
+
+# --------------------------------------------------------------------------- #
+# k-means
+# --------------------------------------------------------------------------- #
+
+def test_kmeans_recovers_separated_blobs():
+    k, per = 3, 60
+    X = jnp.concatenate([
+        jax.random.normal(jax.random.fold_in(KEY, j), (per, 2)) * 0.3
+        + 5.0 * jnp.asarray([np.cos(2 * np.pi * j / k),
+                             np.sin(2 * np.pi * j / k)])
+        for j in range(k)
+    ])
+    truth = np.repeat(np.arange(k), per)
+    labels, centers, inertia = kmeans(jax.random.fold_in(KEY, 99), X, k)
+    assert adjusted_rand_index(np.asarray(labels), truth) == 1.0
+    assert float(inertia) < per * k * 0.3**2 * 2 * 2.0
+
+
+# --------------------------------------------------------------------------- #
+# full pipeline — planted 2-block fixture (ISSUE 2 acceptance: ARI ≥ 0.95)
+# --------------------------------------------------------------------------- #
+
+def test_spectral_clustering_recovers_planted_blocks():
+    K, truth = _two_block_kernel(120)
+    res = spectral_cluster(jax.random.fold_in(KEY, 5), K, 2, d=16, m=4,
+                           use_kernel=False)
+    assert adjusted_rand_index(np.asarray(res.labels), truth) >= 0.95
+    # the top-2 eigenvalues dominate (block structure)
+    assert float(res.eigvals[1]) > 0.0
+
+
+def test_spectral_clustering_adaptive_engine_path():
+    """tol= routes through the progressive engine and still recovers labels."""
+    K, truth = _two_block_kernel(100)
+    res = spectral_cluster(jax.random.fold_in(KEY, 6), K, 2, d=16, tol=0.1,
+                           m_max=16, use_kernel=False)
+    assert adjusted_rand_index(np.asarray(res.labels), truth) >= 0.95
+    assert 1 <= res.info["m"] <= 16
+    assert res.sketch.m == res.info["m"]
+
+
+def test_spectral_cluster_kernel_routing():
+    """The fused Pallas sketch_both path (interpret on CPU) gives the same
+    clustering as the XLA path."""
+    K, truth = _two_block_kernel(80)
+    r_xla = spectral_cluster(jax.random.fold_in(KEY, 7), K, 2, d=16, m=4,
+                             use_kernel=False)
+    r_krn = spectral_cluster(jax.random.fold_in(KEY, 7), K, 2, d=16, m=4,
+                             use_kernel=True)
+    assert adjusted_rand_index(np.asarray(r_xla.labels),
+                               np.asarray(r_krn.labels)) == 1.0

@@ -16,7 +16,7 @@ from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_adamw
 from repro.optim.compress import CompressConfig, compress_grads, init_error_feedback
 from repro.serve.engine import Engine, ServeConfig
 from repro.train.loop import LoopConfig, run
-from repro.train.step import TrainConfig, init_train_state, train_step
+from repro.train.step import TrainConfig, init_train_state
 
 KEY = jax.random.PRNGKey(0)
 
@@ -72,7 +72,6 @@ def test_data_deterministic_and_restart_safe():
 
 
 def test_data_host_sharding_partitions():
-    dc = DataConfig(vocab_size=100, seq_len=8, global_batch=8, n_hosts=4)
     parts = [host_batch(DataConfig(100, 8, 8, 0, 4, h), 3)[0] for h in range(4)]
     assert all(p.shape == (2, 8) for p in parts)
     # different hosts get different data
