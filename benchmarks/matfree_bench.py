@@ -1,0 +1,133 @@
+"""Matrix-free sketching benchmark: the O(n²) memory wall, removed.
+
+Runs the ``KernelOperator`` pipeline — C = K S and W = SᵀKS streamed straight
+from the dataset, K never materialized — at n far beyond what a dense n×n
+kernel matrix allows on this host, including a full KRR fit + predict at
+n = 131072 (the dense path is *refused* at that shape: the f32 Gram matrix
+alone is 64 GiB and the sqdist intermediates triple it).  At a small anchor
+shape the dense and matrix-free paths are timed side by side, and the JSON
+records the dense-vs-matfree memory table the README anchors to.
+
+Run:   PYTHONPATH=src python -m benchmarks.run matfree
+Smoke: PYTHONPATH=src python -m benchmarks.run matfree --smoke
+       (tiny shapes, 1 rep — CI's configuration; JSON tagged "smoke": true)
+
+Writes ``BENCH_matfree.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+
+from benchmarks.common import bimodal_data, emit, timeit
+from repro.core import apply as A
+from repro.core.kernel_op import KernelOperator
+from repro.core.krr import krr_sketched_fit
+from repro.core.sketch import make_accum_sketch
+from repro.util import env_flag
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_matfree.json"
+
+# n sweep; the last entry is far past the dense wall (64 GiB Gram matrix)
+FULL = dict(ns=[4096, 16384, 131072], d=64, m=4, n_test=2048, bandwidth=0.75,
+            lam=1e-3)
+SMOKE = dict(ns=[256, 1024], d=16, m=2, n_test=64, bandwidth=0.75, lam=1e-3)
+
+
+def bench_config() -> tuple[dict, int]:
+    if env_flag("REPRO_BENCH_SMOKE", False):
+        return SMOKE, 1
+    return FULL, 2
+
+
+def _mem_row(n: int, p: int, d: int) -> dict:
+    """Bytes a dense K needs vs what the matrix-free path ever holds
+    (the dataset + C; the streamed kernel slab is chunk-bounded)."""
+    return {
+        "dense_K_bytes": 4 * n * n,
+        "matfree_bytes": 4 * n * (p + d),
+        "ratio": (4 * n * n) / max(4 * n * (p + d), 1),
+    }
+
+
+def main() -> None:
+    cfg, reps = bench_config()
+    d, m = cfg["d"], cfg["m"]
+    key = jax.random.PRNGKey(0)
+    results: dict = {}
+    memory: dict = {}
+    top_n = max(cfg["ns"])
+
+    for n in cfg["ns"]:
+        X, y, _ = bimodal_data(jax.random.fold_in(key, n), n)
+        p = X.shape[1]
+        Xt = X[: cfg["n_test"]] + 0.01
+        op = KernelOperator(X, "gaussian", bandwidth=cfg["bandwidth"])
+        sk = make_accum_sketch(jax.random.fold_in(key, 2 * n), n, d, m)
+        tag = f"n{n}_d{d}_m{m}"
+        memory[tag] = _mem_row(n, p, d)
+        this_reps = 1 if n >= 65536 else reps
+
+        t_cw = timeit(
+            jax.jit(lambda o, s: o.sketch_both(s, use_kernel=False)), op, sk,
+            reps=this_reps)
+        emit(f"matfree_sketch_both_{tag}", t_cw * 1e6,
+             f"streamed C,W; K never formed (dense would be "
+             f"{memory[tag]['dense_K_bytes'] / 2**30:.1f} GiB)")
+        results[f"matfree_sketch_both_{tag}"] = {"us": t_cw * 1e6}
+
+        def fit_predict(op=op, y=y, sk=sk, Xt=Xt):
+            model = krr_sketched_fit(op, y, cfg["lam"], sk, use_kernel=False)
+            return model.predict(Xt)
+
+        t_fit = timeit(fit_predict, reps=this_reps)
+        emit(f"matfree_krr_fit_predict_{tag}", t_fit * 1e6,
+             f"fit+predict({cfg['n_test']}) straight from X")
+        results[f"matfree_krr_fit_predict_{tag}"] = {"us": t_fit * 1e6}
+
+        if n == min(cfg["ns"]):
+            # dense comparison only at the smallest shape (it's the slow one)
+            K = op.dense(force=True)
+            t_dense = timeit(
+                jax.jit(lambda K, s: A.sketch_both(K, s, use_kernel=False)),
+                K, sk, reps=this_reps)
+            emit(f"dense_sketch_both_{tag}", t_dense * 1e6,
+                 f"materialized K path; matfree/dense={t_cw / max(t_dense, 1e-9):.2f}x time, "
+                 f"{memory[tag]['ratio']:.0f}x memory")
+            results[f"dense_sketch_both_{tag}"] = {"us": t_dense * 1e6}
+            del K
+
+    # the acceptance claim: the dense path is refused at the top shape
+    X, _, _ = bimodal_data(jax.random.fold_in(key, top_n), top_n)
+    refused = None
+    try:
+        KernelOperator(X, "gaussian", bandwidth=cfg["bandwidth"]).dense()
+    except ValueError as e:
+        refused = str(e)
+    if refused is None and top_n > 32768:
+        raise RuntimeError("dense() should have been refused at the top shape")
+    emit("dense_refused_at_top_n", 0.0,
+         f"n={top_n}: {'refused' if refused else 'allowed (small smoke shape)'}")
+
+    payload = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+        },
+        "config": cfg,
+        "smoke": env_flag("REPRO_BENCH_SMOKE", False),
+        "results": results,
+        "memory": memory,
+        "dense_refused_at_top_n": refused is not None,
+        "dense_refusal_message": refused,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("bench_json", 0.0, f"wrote {BENCH_PATH.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,18 @@
 """Benchmark harness: one module per paper table/figure + system benches.
 Prints ``name,us_per_call,derived`` CSV rows. Suites that track a perf
-trajectory (currently ``kernels``) also write a BENCH_*.json at the repo
+trajectory (``kernels``, ``matfree``) also write a BENCH_*.json at the repo
 root — old-vs-new kernel and structural-vs-dense timings live in
-``BENCH_kernels.json``.
+``BENCH_kernels.json``; the matrix-free operator's past-the-n²-wall numbers
+(KRR at n = 131072, dense refused) live in ``BENCH_matfree.json``.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
   PYTHONPATH=src python -m benchmarks.run kernels    # refresh BENCH_kernels.json
+  PYTHONPATH=src python -m benchmarks.run matfree    # refresh BENCH_matfree.json
 
-``--smoke`` runs suites that honor it (currently ``kernels``) at tiny shapes
-with a single rep — CI uses it to regenerate BENCH_kernels.json on every PR
-without timing out; the JSON is tagged ``"smoke": true`` so real trajectory
+``--smoke`` runs suites that honor it (``kernels``, ``matfree``) at tiny
+shapes with a single rep — CI uses it to regenerate the JSONs on every PR
+without timing out; they are tagged ``"smoke": true`` so real trajectory
 numbers are never overwritten by CI artifacts.
 """
 from __future__ import annotations
@@ -20,7 +22,8 @@ import sys
 import traceback
 
 from benchmarks import amm_bench, falkon_bench, fig1_toy, fig2_approx_error
-from benchmarks import fig3_tradeoff, kernel_bench, roofline, train_bench
+from benchmarks import fig3_tradeoff, kernel_bench, matfree_bench, roofline
+from benchmarks import train_bench
 
 SUITES = {
     "fig1": fig1_toy.main,          # paper Fig. 1 (toy tradeoff)
@@ -29,6 +32,7 @@ SUITES = {
     "falkon": falkon_bench.main,    # paper appendix D.3 (Falkon-style PCG)
     "amm": amm_bench.main,          # paper §5 extension
     "kernels": kernel_bench.main,   # Pallas kernels + O(nmd) claim
+    "matfree": matfree_bench.main,  # matrix-free operator: past the n² wall
     "train": train_bench.main,      # end-to-end step throughput
     "roofline": roofline.main,      # dry-run roofline table
 }

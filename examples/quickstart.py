@@ -2,8 +2,10 @@
 
 Builds an accumulation sketch (Algorithm 1), solves sketched KRR without ever
 forming the n×n kernel matrix, and compares against exact KRR and Nyström.
-The last section shows ADAPTIVE accumulation: specify an error target instead
-of m and let the progressive engine grow the sketch one O(n·d) slab at a time.
+Then ADAPTIVE accumulation (an error target instead of m, the progressive
+engine grows the sketch one O(n·d) slab at a time) and the MATRIX-FREE
+operator: dataset in, predictions out, at an n where the dense kernel matrix
+could not even be allocated.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    get_kernel, insample_error, krr_exact_fitted, krr_sketched_fit_adaptive,
-    krr_sketched_fit_matfree, make_accum_sketch, make_nystrom_sketch,
+    KernelOperator, get_kernel, insample_error, krr_exact_fitted,
+    krr_sketched_fit, krr_sketched_fit_adaptive, krr_sketched_fit_matfree,
+    make_accum_sketch, make_nystrom_sketch,
 )
 
 key = jax.random.PRNGKey(0)
@@ -54,3 +57,22 @@ for tol in [0.2, 0.05, 0.02]:
     err = insample_error(model.fitted, fitted_hard)
     print(f"  tol={tol:5.2f} → engine chose m={model.info['m']:2d} "
           f"(est err {model.info['err']:.3f}), ‖f̂_S − f̂_n‖²_n = {float(err):.3e}")
+
+# ---- matrix-free: sketch the DATASET, not a matrix ------------------------- #
+# KernelOperator = data + kernel name. C = K S and W = SᵀKS stream from X in
+# row tiles (fused kernel-eval → GEMM on TPU, lax.scan on CPU); the n×n kernel
+# matrix never exists, so n is bounded by O(n·d) — not O(n²) — memory.
+# Here: n = 50_000, where dense K alone would be 10 GB (op.dense() refuses
+# above n = 32768; see BENCH_matfree.json for the n = 131072 numbers).
+n_big = 50_000
+kb = jax.random.fold_in(key, 2)
+X_big = jax.random.uniform(kb, (n_big, 3))
+y_big = jnp.sin(3 * X_big[:, 0]) + X_big[:, 1] ** 2 - X_big[:, 2] \
+    + 0.3 * jax.random.normal(jax.random.fold_in(kb, 1), (n_big,))
+op = KernelOperator(X_big, "gaussian", bandwidth=0.5)
+sk_big = make_accum_sketch(kb, n_big, 64, m=4)
+model = krr_sketched_fit(op, y_big, lam, sk_big)      # dataset in — no K
+pred = model.predict(X_big[:5])                       # K(x, landmarks)·θ only
+print(f"\nmatrix-free KRR at n={n_big:,}: dense K would be "
+      f"{4 * n_big**2 / 1e9:.0f} GB; the operator held "
+      f"{4 * n_big * (3 + 64) / 1e6:.0f} MB. predictions: {pred[:3]}")

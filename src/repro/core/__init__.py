@@ -26,6 +26,7 @@ from repro.core.apply import (
     unsketch_mat,
     unsketch_vec,
 )
+from repro.core.kernel_op import KernelOperator, stream_cols
 from repro.core.krr import (
     SketchedKRR,
     insample_error,

@@ -42,6 +42,18 @@ def default_use_kernel() -> bool:
     return env_flag("REPRO_SKETCH_KERNEL", jax.default_backend() == "tpu")
 
 
+def _operator(K):
+    """The KernelOperator behind K, or None for a dense array.
+
+    Every K-consuming routine here dispatches through this so callers can pass
+    either a materialized (n, n) kernel matrix or the matrix-free
+    ``repro.core.kernel_op.KernelOperator`` (lazy import: kernel_op imports
+    this module for the structural applications)."""
+    from repro.core.kernel_op import KernelOperator
+
+    return K if isinstance(K, KernelOperator) else None
+
+
 def sketch_right(K: jax.Array, sk: AccumSketch) -> jax.Array:
     """K S for K of shape (r, n) → (r, d). O(r·m·d)."""
     cols = jnp.take(K, sk.indices.reshape(-1), axis=1)          # (r, m*d)
@@ -82,9 +94,15 @@ def sketch_both(
 ) -> tuple[jax.Array, jax.Array]:
     """(K S, Sᵀ K S) sharing the K S intermediate, as in the paper.
 
-    With ``use_kernel`` (auto: True on TPU) the pair is computed by the fused
-    single-sweep Pallas kernel — one pass over K, W accumulated in-kernel —
-    instead of two gather passes."""
+    ``K`` may be a dense (n, n) array or a matrix-free ``KernelOperator`` —
+    the operator path streams kernel evaluations in row tiles and never
+    allocates the n×n matrix.  With ``use_kernel`` (auto: True on TPU) the
+    dense pair is computed by the fused single-sweep Pallas kernel — one pass
+    over K, W accumulated in-kernel — instead of two gather passes (the
+    operator routes through the fused kernel-eval→GEMM kernel instead)."""
+    op = _operator(K)
+    if op is not None:
+        return op.sketch_both(sk, use_kernel=use_kernel)
     if use_kernel is None:
         use_kernel = default_use_kernel()
     if use_kernel:
@@ -148,9 +166,14 @@ def accum_step(K: jax.Array, state: AccumState, *,
     """Fold ONE new sub-sampling matrix into (C, W): the rank-d incremental
     update, O(n·d) per step.
 
-    With ``use_kernel`` (auto: True on TPU) the C update runs through the
-    single-slab Pallas entry point (``sketch_step_kernel``) so the increment's
-    gather→GEMM hits the MXU; the W pieces are d×d gathers either way."""
+    ``K`` may be dense or a ``KernelOperator`` — the operator evaluates the
+    slab's column block K(X, X[idx]) directly from data (O(n·d) kernel evals,
+    the matrix-free analogue of the column gather) and the d×d piece from d²
+    evals.  With ``use_kernel`` (auto: True on TPU) the dense C update runs
+    through the single-slab Pallas entry point (``sketch_step_kernel``) and
+    the operator through the fused matfree kernel; the W pieces are d×d
+    gathers either way."""
+    op = _operator(K)
     if use_kernel is None:
         use_kernel = default_use_kernel()
     t = state.m
@@ -165,12 +188,22 @@ def accum_step(K: jax.Array, state: AccumState, *,
 
     # W update from d×d gathers only:  T̃ᵀC_t and (T̃ᵀK T̃)[i,j] = c_i K[n_i,n_j] c_j
     TtC = coef_new[:, None] * jnp.take(state.C, idx_new, axis=0)
-    Ksub = jnp.take(jnp.take(K, idx_new, axis=0), idx_new, axis=1)
+    if op is not None:
+        Ksub = op.submatrix(idx_new, idx_new)
+    else:
+        Ksub = jnp.take(jnp.take(K, idx_new, axis=0), idx_new, axis=1)
     TtKT = coef_new[:, None] * Ksub.astype(jnp.float32) * coef_new[None, :]
     W_new = (a * a) * state.W + a * (TtC + TtC.T) + TtKT
     W_new = 0.5 * (W_new + W_new.T)                    # exact-arithmetic symmetry
 
-    if use_kernel:
+    if op is not None:
+        G = op.weighted_cols(op.X, idx_new[None, :], coef_new[None, :],
+                             use_kernel=use_kernel)
+        # the loop carry C is always f32 (AccumState contract); an f64
+        # operator (x64 mode) must not promote it or the while/fori carry
+        # dtype check rejects the step
+        C_new = a * state.C + G.astype(jnp.float32)
+    elif use_kernel:
         from repro.kernels.accum_apply.ops import sketch_step_kernel
         C_new = sketch_step_kernel(K, idx_new, coef_new, state.C, a)
     else:
@@ -195,10 +228,15 @@ def make_holdout_estimator(key: jax.Array, K: jax.Array, num: int = 64,
                            *, jitter: float = 1e-6):
     """Plug-in stopping rule: relative Nyström-reconstruction error of the
     sketched operator K̂ = C W⁺ Cᵀ on a fixed random holdout principal
-    submatrix — O(h²·d + d³) per evaluation, independent of n."""
+    submatrix — O(h²·d + d³) per evaluation, independent of n.  With a
+    ``KernelOperator`` the h×h holdout block comes from h² kernel evals."""
+    op = _operator(K)
     n = K.shape[0]
     hold = jax.random.choice(key, n, shape=(min(num, n),), replace=False)
-    Kh = jnp.take(jnp.take(K, hold, axis=0), hold, axis=1).astype(jnp.float32)
+    if op is not None:
+        Kh = op.submatrix(hold, hold).astype(jnp.float32)
+    else:
+        Kh = jnp.take(jnp.take(K, hold, axis=0), hold, axis=1).astype(jnp.float32)
     denom = jnp.maximum(jnp.linalg.norm(Kh), 1e-30)
 
     def estimate(state: AccumState) -> jax.Array:
@@ -215,10 +253,16 @@ def make_hutchinson_estimator(key: jax.Array, K: jax.Array, num_probes: int = 8,
     """Plug-in stopping rule: Hutchinson estimate of the relative trace
     residual tr(K − K̂)/tr̂(K) with Rademacher probes.  K Z is precomputed once
     (K is fixed while m grows), so each evaluation costs O(n·d·q + d³).  The
-    Nyström residual of a PSD K is PSD, so the estimate is a true error."""
+    Nyström residual of a PSD K is PSD, so the estimate is a true error.
+    With a ``KernelOperator`` the one-time K Z is a streamed matvec —
+    O(n²·p·q) kernel-eval compute but O(chunk·n) memory, never n²."""
+    op = _operator(K)
     n = K.shape[0]
     Z = jax.random.rademacher(key, (n, num_probes), dtype=jnp.float32)
-    KZ = K.astype(jnp.float32) @ Z                     # one-time O(n²·q)
+    if op is not None:
+        KZ = op.matvec(Z)                              # streamed, O(chunk·n) mem
+    else:
+        KZ = K.astype(jnp.float32) @ Z                 # one-time O(n²·q)
     zKz = jnp.einsum("nq,nq->q", Z, KZ)
     denom = jnp.maximum(jnp.mean(zKz), 1e-30)
 
@@ -259,9 +303,10 @@ def grow_sketch_both(
     signed: bool = True, estimator=None, check_every: int = 1,
     use_kernel: bool | None = None,
 ) -> tuple[AccumSketch, jax.Array, jax.Array, dict]:
-    """One-call driver: grow a sketch on a precomputed K until the error
-    target is met (or to m_max when ``tol`` is None) and return
-    ``(sketch, C, W, info)`` with C = K S, W = SᵀKS at the final m.
+    """One-call driver: grow a sketch on K — a precomputed matrix OR a
+    matrix-free ``KernelOperator`` — until the error target is met (or to
+    m_max when ``tol`` is None) and return ``(sketch, C, W, info)`` with
+    C = K S, W = SᵀKS at the final m.
 
     Callers specify an error target instead of m — the paper's rescue of
     suboptimal (uniform / approximate-leverage) sampling schemes: grow m,
@@ -287,21 +332,12 @@ def sketch_kernel_cols(
 ) -> jax.Array:
     """C = K S without ever forming K:  O(n·m·d) kernel evaluations.
 
-    kernel_fn(A, B) -> (|A|, |B|) kernel matrix. Gathers the m·d landmark points,
-    evaluates the (n, m·d) slab, and contracts with the combination coefficients.
-    `chunk` optionally processes rows of X in chunks to bound peak memory.
-    """
+    kernel_fn(A, B) -> (|A|, |B|) kernel matrix. Gathers the m·d landmark
+    points, evaluates the (chunk, m·d) slab per row chunk, and contracts with
+    the combination coefficients (``kernel_op.stream_cols`` — a ``lax.scan``
+    streaming sweep).  Thin ad-hoc-callable wrapper; prefer a
+    ``KernelOperator`` for named kernels (Pallas routing, engine support)."""
+    from repro.core.kernel_op import stream_cols
+
     landmarks = jnp.take(X, sk.indices.reshape(-1), axis=0)      # (m*d, d_X)
-
-    def _block(xb):
-        slab = kernel_fn(xb, landmarks)                          # (b, m*d)
-        return jnp.einsum("bmd,md->bd", slab.reshape(xb.shape[0], sk.m, sk.d), sk.coef)
-
-    if chunk is None or X.shape[0] <= chunk:
-        return _block(X)
-    nfull = (X.shape[0] // chunk) * chunk
-    body = jax.lax.map(_block, X[:nfull].reshape(-1, chunk, X.shape[1]))
-    out = body.reshape(nfull, sk.d)
-    if nfull < X.shape[0]:
-        out = jnp.concatenate([out, _block(X[nfull:])], axis=0)
-    return out
+    return stream_cols(X, landmarks, sk.coef, kernel_fn, chunk=chunk)

@@ -11,6 +11,12 @@ Four application paths:
     one O(n·d) incremental slab at a time until a plug-in error estimate
     clears the caller's tolerance, and the solve reuses the incrementally
     accumulated (C, W)
+
+Every SKETCHED K-taking entry point (``krr_sketched_fit*``) also accepts a
+matrix-free ``repro.core.kernel_op.KernelOperator`` (dataset + kernel name)
+in place of the dense matrix — the production configuration at n beyond ~10⁴,
+where the n×n Gram matrix must never exist.  The exact solvers
+(``krr_exact_fit*``) genuinely need the materialized matrix.
 """
 from __future__ import annotations
 
@@ -62,7 +68,12 @@ def krr_exact_fitted(K: jax.Array, y: jax.Array, lam: float) -> jax.Array:
 
 @dataclasses.dataclass
 class SketchedKRR:
-    """Fitted sketched-KRR model. predict() is O(n_test · m · d)."""
+    """Fitted sketched-KRR model. predict() is O(n_test · m · d).
+
+    ``op`` carries the matrix-free ``KernelOperator`` when the model was fit
+    through one; predict then routes K(X_test, landmarks)·θ through the
+    operator (fused Pallas path on TPU) — test rows never meet an n×n
+    matrix."""
 
     theta: jax.Array                   # (d,) dual coefficients in sketch space
     sk: AccumSketch | None             # structural sketch (None for dense S)
@@ -71,11 +82,20 @@ class SketchedKRR:
     kernel_fn: Callable | None
     fitted: jax.Array                  # in-sample f̂_S(X) (n,)
     info: dict | None = None           # adaptive-fit stats {"m", "err", ...}
+    op: "KernelOperator | None" = None  # matrix-free operator (predict routing)
 
     def predict(self, X_test: jax.Array) -> jax.Array:
+        if self.op is not None and self.sk is not None:
+            return self.op.cross_cols(X_test, self.sk) @ self.theta
         assert self.X_train is not None and self.kernel_fn is not None
         if self.sk is not None:
-            C_test = A.sketch_kernel_cols(X_test, self.sk, self.kernel_fn)
+            # landmarks come from the TRAINING rows (the sketch indexes X_train;
+            # gathering from X_test — as the seed did via sketch_kernel_cols —
+            # read out-of-bounds whenever n_test < n_train and filled NaN)
+            from repro.core.kernel_op import stream_cols
+
+            lm = jnp.take(self.X_train, self.sk.indices.reshape(-1), axis=0)
+            C_test = stream_cols(X_test, lm, self.sk.coef, self.kernel_fn)
         else:
             K_test = self.kernel_fn(X_test, self.X_train)
             C_test = K_test @ self.S_dense
@@ -96,12 +116,19 @@ def krr_sketched_fit(
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
     *, use_kernel: bool | None = None,
 ) -> SketchedKRR:
-    """Structural path on a precomputed K: C and W in one pass, O(n·m·d).
+    """Structural path on K — a precomputed matrix or a matrix-free
+    ``KernelOperator``: C and W in one pass, O(n·m·d).
 
-    ``use_kernel`` (auto: True on TPU) routes (C, W) through the fused
-    single-sweep Pallas kernel instead of two XLA gather passes."""
+    ``use_kernel`` (auto: True on TPU) routes dense (C, W) through the fused
+    single-sweep Pallas kernel instead of two XLA gather passes; an operator
+    routes through the fused kernel-eval→GEMM kernel and never forms K.
+    With an operator, predict() is wired up automatically (no X_train /
+    kernel_fn needed)."""
+    op = A._operator(K)
     C, W = A.sketch_both(K, sk, use_kernel=use_kernel)
     theta, fitted = _fit_from_C(C, W, y, lam)
+    if op is not None:
+        return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted, op=op)
     return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted)
 
 
@@ -127,18 +154,28 @@ def _sketch_left_routed(sk, C, use_kernel: bool | None):
 
 
 def krr_sketched_fit_matfree(
-    X: jax.Array, y: jax.Array, lam: float, sk: AccumSketch, kernel_fn: Callable,
-    *, chunk: int | None = None, use_kernel: bool | None = None,
+    X, y: jax.Array, lam: float, sk: AccumSketch,
+    kernel_fn: Callable | None = None, *, chunk: int | None = None,
+    use_kernel: bool | None = None,
 ) -> SketchedKRR:
     """Matrix-free path: never forms K. C = K S from O(n·m·d) kernel evals;
     W = Sᵀ C is a row gather of C (routed through the Pallas kernel on TPU).
-    This is the production configuration."""
-    C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
+    This is the production configuration.
+
+    ``X`` may be the raw (n, p) data with an explicit ``kernel_fn`` callable,
+    or a ``KernelOperator`` (kernel_fn omitted) — the operator additionally
+    unlocks the fused Pallas kernel-eval→GEMM path for C."""
+    op = A._operator(X)
+    if op is not None:
+        C = op.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
+        X, kernel_fn = op.X, op.kernel_fn
+    else:
+        C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
     W = _sketch_left_routed(sk, C, use_kernel)
     # symmetrize W: SᵀKS is symmetric in exact arithmetic
     W = 0.5 * (W + W.T)
     theta, fitted = _fit_from_C(C, W, y, lam)
-    return SketchedKRR(theta, sk, None, X, kernel_fn, fitted)
+    return SketchedKRR(theta, sk, None, X, kernel_fn, fitted, op=op)
 
 
 def _pcg_solve(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
@@ -163,9 +200,9 @@ def _pcg_solve(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
 
 
 def krr_sketched_fit_pcg(
-    X: jax.Array, y: jax.Array, lam: float, sk: AccumSketch, kernel_fn: Callable,
-    *, iters: int = 30, chunk: int | None = None,
-    use_kernel: bool | None = None,
+    X, y: jax.Array, lam: float, sk: AccumSketch,
+    kernel_fn: Callable | None = None, *, iters: int = 30,
+    chunk: int | None = None, use_kernel: bool | None = None,
 ) -> SketchedKRR:
     """Falkon-flavoured solver (Rudi et al. 2017) on the accumulation sketch:
     preconditioned CG on the Woodbury system
@@ -176,12 +213,19 @@ def krr_sketched_fit_pcg(
     paper's point in §3.3: accumulation keeps the preconditioner d×d (one
     Cholesky of the SMALL matrix) where a vanilla md-landmark Nyström solve
     would factor an (md)×(md) system. O(n·m·d·iters), never forms K, and never
-    materializes CᵀC (CG touches it only through matvecs)."""
-    C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
+    materializes CᵀC (CG touches it only through matvecs).
+
+    ``X``: raw data + ``kernel_fn`` callable, or a ``KernelOperator``."""
+    op = A._operator(X)
+    if op is not None:
+        C = op.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
+        X, kernel_fn = op.X, op.kernel_fn
+    else:
+        C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
     W = _sketch_left_routed(sk, C, use_kernel)
     W = 0.5 * (W + W.T)
     theta = _pcg_solve(C, W, y, lam, iters)
-    return SketchedKRR(theta, sk, None, X, kernel_fn, C @ theta)
+    return SketchedKRR(theta, sk, None, X, kernel_fn, C @ theta, op=op)
 
 
 # --------------------------------------------------------------------------- #
@@ -202,11 +246,18 @@ def krr_sketched_fit_adaptive(
 
     This is the paper's rescue of suboptimal sampling: callers specify an
     error target, not m, and cheap uniform / approximate-leverage
-    probabilities simply buy more slabs."""
+    probabilities simply buy more slabs.  ``K`` may be dense or a
+    ``KernelOperator`` (the engine then grows matrix-free: each slab is an
+    O(n·d) kernel-eval column block, the holdout estimator a principal
+    submatrix of kernel evals)."""
+    op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
         check_every=check_every, use_kernel=use_kernel)
     theta, fitted = _fit_from_C(C, W, y, lam)
+    if op is not None:
+        return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted,
+                           info=info, op=op)
     return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted, info=info)
 
 
@@ -219,11 +270,16 @@ def krr_sketched_fit_pcg_adaptive(
 ) -> SketchedKRR:
     """Adaptive-m Falkon-style PCG: the progressive engine grows (C, W) to the
     error target, then CG reuses the incremental pair directly — the d×d
-    preconditioner never changes size while m grows (paper §3.3)."""
+    preconditioner never changes size while m grows (paper §3.3).  ``K`` may
+    be dense or a matrix-free ``KernelOperator``."""
+    op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
         check_every=check_every, use_kernel=use_kernel)
     theta = _pcg_solve(C, W, y, lam, iters)
+    if op is not None:
+        return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, C @ theta,
+                           info=info, op=op)
     return SketchedKRR(theta, sk, None, X_train, kernel_fn, C @ theta, info=info)
 
 

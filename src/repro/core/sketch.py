@@ -102,9 +102,20 @@ class AccumSketch:
         return jnp.einsum("mdn,md->nd", onehot, self.coef)
 
     def nnz_per_column(self) -> jax.Array:
-        """Number of distinct non-zeros per column (≤ m); density diagnostic."""
-        s = self.dense()
-        return jnp.sum(s != 0, axis=0)
+        """Number of distinct non-zeros per column (≤ m); density diagnostic.
+
+        Computed O(m²·d) from ``indices``/``coef`` directly — never the dense
+        (n, d) S: for each column, group the m draws by sampled row (the m×m
+        index-coincidence mask) and count the distinct rows whose summed
+        coefficient is non-zero (colliding draws with cancelling signs are
+        zeros in S, exactly as in the dense count)."""
+        coef = self.coef
+        eq = self.indices[:, None, :] == self.indices[None, :, :]   # (m, m, d)
+        summed = jnp.sum(jnp.where(eq, coef[None, :, :], 0.0), axis=1)
+        # entry i represents its row iff no earlier draw i' < i hit the same row
+        earlier = jnp.tril(jnp.ones((self.m, self.m), bool), k=-1)
+        seen = jnp.any(eq & earlier[:, :, None], axis=1)            # (m, d)
+        return jnp.sum(~seen & (summed != 0), axis=0)
 
 
 def _compute_coef(indices: jax.Array, signs: jax.Array, probs: jax.Array) -> jax.Array:

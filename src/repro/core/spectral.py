@@ -179,6 +179,11 @@ def spectral_cluster(
 ) -> SpectralResult:
     """Sketched spectral clustering of the affinity matrix K.
 
+    ``K`` may be a dense (n, n) affinity or a matrix-free ``KernelOperator``
+    (dataset + kernel name) — with an operator the affinity is never
+    materialized: (C, W) come from row-streamed kernel evaluations and the
+    whole pipeline stays O(n·d) memory.
+
     Pipeline: sketch → (C, W) → top-``n_clusters`` eigenvector embedding of
     the (normalized) sketched affinity → row-normalize → k-means.  Exactly one
     of ``m`` (fixed sketch size, fused ``sketch_both`` kernel path) or ``tol``

@@ -38,6 +38,7 @@ both under the ~16 MiB/core budget.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -248,6 +249,94 @@ def accum_step_slab(
         out_shape=jax.ShapeDtypeStruct((R, d), Cin.dtype),
         interpret=interpret,
     )(idx, coef, a, K, Cin)
+
+
+# --------------------------------------------------------------------------- #
+# matrix-free C = K(X, X)·S — fused kernel-eval → GEMM, K never materialized
+# --------------------------------------------------------------------------- #
+
+def _kernel_eval(d2: jax.Array, kernel: str, bandwidth: float, nu: float) -> jax.Array:
+    """Elementwise PSD kernel on squared distances, mirroring
+    ``core/kernels_math.py`` EXACTLY (same guards, same closed forms) so the
+    matrix-free path is bit-compatible with a materialized K."""
+    if kernel == "gaussian":
+        return jnp.exp(-d2 / (2.0 * bandwidth**2))
+    r = jnp.sqrt(d2 + 1e-30)
+    if kernel == "laplacian":
+        return jnp.exp(-r / bandwidth)
+    if kernel == "matern":
+        r = r / bandwidth
+        if nu == 0.5:
+            return jnp.exp(-r)
+        if nu == 1.5:
+            c = math.sqrt(3.0)
+            return (1.0 + c * r) * jnp.exp(-c * r)
+        if nu == 2.5:
+            c = math.sqrt(5.0)
+            return (1.0 + c * r + 5.0 * r * r / 3.0) * jnp.exp(-c * r)
+        raise ValueError(f"unsupported nu={nu}")
+    raise ValueError(f"unknown kernel {kernel}")
+
+
+def _matfree_kernel(X_ref, L_ref, Cm_ref, out_ref, *, kernel: str,
+                    bandwidth: float, nu: float):
+    """Per row tile: evaluate the (bm, md) kernel block K(X_tile, L) in VMEM
+    via the pairwise-sqdist + closed-form formulation and immediately contract
+    it with the (md, d) combination-coefficient matrix — gather→eval→GEMM,
+    never allocating an n×anything-beyond-md buffer."""
+    x = X_ref[...].astype(jnp.float32)                             # (bm, p)
+    l = L_ref[...].astype(jnp.float32)                             # (md, p)
+    x2 = jnp.sum(x * x, axis=1)[:, None]
+    l2 = jnp.sum(l * l, axis=1)[None, :]
+    xl = jax.lax.dot_general(
+        x, l, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                              # (bm, md)
+    d2 = jnp.maximum(x2 + l2 - 2.0 * xl, 0.0)
+    kv = _kernel_eval(d2, kernel, bandwidth, nu)
+    out_ref[...] = jax.lax.dot_general(
+        kv, Cm_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kernel", "bandwidth", "nu", "bm", "interpret"))
+def matfree_apply(
+    X: jax.Array, L: jax.Array, Cmat: jax.Array, *, kernel: str,
+    bandwidth: float = 1.0, nu: float = 1.5, bm: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = K(X, L)·Cmat without materializing any n×n object.
+
+    X: (n, p) query rows; L: (md, p) landmark rows (the sketch's sampled
+    points, zero-padded rows allowed); Cmat: (md, d) expanded combination
+    coefficients (entry (i·d+j, j) = coef[i, j]; padded rows are all-zero so
+    padded landmarks contribute nothing regardless of their kernel value).
+    The grid streams X in (bm, p) row tiles — peak VMEM per step is the tile,
+    the landmark block, and the (bm, md) kernel slab, independent of n.
+
+    n must tile by bm (the ops.py wrapper pads); returns (n, d) f32."""
+    n, p = X.shape
+    md, d = Cmat.shape
+    assert L.shape == (md, p), (L.shape, md, p)
+    bm = min(bm, n)
+    assert n % bm == 0, (n, bm)
+    grid = (n // bm,)
+    return pl.pallas_call(
+        functools.partial(_matfree_kernel, kernel=kernel, bandwidth=bandwidth,
+                          nu=nu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, p), lambda r: (r, 0)),
+            pl.BlockSpec((md, p), lambda r: (0, 0)),
+            pl.BlockSpec((md, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(X, L, Cmat)
 
 
 # --------------------------------------------------------------------------- #

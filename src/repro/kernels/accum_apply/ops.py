@@ -28,6 +28,7 @@ from repro.kernels.accum_apply.kernel import (
     accum_apply,
     accum_sketch_both,
     accum_step_slab,
+    matfree_apply,
 )
 from repro.util import env_flag
 
@@ -194,6 +195,56 @@ def sketch_step_kernel(
     out = accum_step_slab(Kp, idx_p, coef_p, Cp, a_arr, bm=bm_e, bd=bd_e,
                           interpret=interpret)
     return out[:R, :d]
+
+
+def expand_coef(coef: jax.Array, d: int) -> jax.Array:
+    """(m, d) combination coefficients → the (m·d, d) block-sparse matrix Cmat
+    with Cmat[i·d + j, j] = coef[i, j], so that S = E·Cmat for the (n, m·d)
+    landmark selection matrix E and K S = K(·, landmarks)·Cmat.  Zero rows
+    (padding) select nothing."""
+    m = coef.shape[0]
+    md = m * d
+    cols = jnp.tile(jnp.arange(d), m)
+    return (
+        jnp.zeros((md, d), jnp.float32)
+        .at[jnp.arange(md), cols]
+        .set(coef.reshape(-1).astype(jnp.float32))
+    )
+
+
+def matfree_cols_kernel(
+    Xq: jax.Array, landmarks: jax.Array, coef: jax.Array, *, kernel: str,
+    bandwidth: float = 1.0, nu: float = 1.5, bm: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """C = K(Xq, X)·S straight from data rows via the fused Pallas kernel —
+    the (tile, m·d) kernel block is evaluated in VMEM and contracted with the
+    coefficient block in the same grid step; no n×n object ever exists.
+
+    Xq: (nq, p) query rows; landmarks: (m·d, p) sampled rows X[sk.indices];
+    coef: (m, d).  Arbitrary nq is row-padded to the tile and sliced back;
+    the landmark count is sublane-padded with zero rows (zero coefficient
+    rows contribute nothing).  Returns (nq, d) float32."""
+    if interpret is None:
+        interpret = default_interpret()
+    nq, p = Xq.shape
+    m, d = coef.shape
+    if bm is None:
+        # keep the f32 (bm, md) kernel slab + (bm, p) tile ≲ 8 MiB of VMEM
+        bm = max(8, min(1024, (2 * 1024 * 1024) // max(m * d + p, 1)))
+    bm_e = min(bm, nq)
+    Xp = _pad_rows(Xq, bm_e)
+    Cmat = expand_coef(coef, d)
+    pad_md = (-(m * d)) % 8
+    if pad_md:
+        landmarks = jnp.pad(landmarks, ((0, pad_md), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, pad_md), (0, 0)))
+    pad_d = (-d) % 8
+    if pad_d:
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad_d)))
+    out = matfree_apply(Xp, landmarks, Cmat, kernel=kernel, bandwidth=bandwidth,
+                        nu=nu, bm=bm_e, interpret=interpret)
+    return out[:nq, :d]
 
 
 def autotune_both_blocks(n: int, interpret: bool) -> tuple[int, int]:

@@ -16,6 +16,21 @@ def accum_apply_ref(K: jax.Array, idx: jax.Array, coef: jax.Array) -> jax.Array:
                       coef.astype(jnp.float32)).astype(K.dtype)
 
 
+def matfree_cols_ref(
+    X: jax.Array, idx: jax.Array, coef: jax.Array, kernel_fn
+) -> jax.Array:
+    """Oracle for the matrix-free fused kernel: C = K(X, X)·S evaluated as the
+    (n, m·d) kernel slab against the gathered landmarks, contracted with the
+    combination coefficients.  One jnp pass, no chunking — CPU/interpret
+    reference only (materializes the full slab).
+
+    kernel_fn(A, B) -> (|A|, |B|) kernel matrix (``core.kernels_math``)."""
+    landmarks = jnp.take(X, idx.reshape(-1), axis=0)        # (m·d, p)
+    slab = kernel_fn(X, landmarks).astype(jnp.float32)      # (n, m·d)
+    slab = slab.reshape(X.shape[0], *idx.shape)             # (n, m, d)
+    return jnp.einsum("nmd,md->nd", slab, coef.astype(jnp.float32))
+
+
 def sketch_both_ref(
     K: jax.Array, idx: jax.Array, coef: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

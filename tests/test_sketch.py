@@ -120,6 +120,24 @@ def test_gram_sketch_scatter_add_matches_dense():
                                np.asarray(gram_sketch(sk)), rtol=1e-6, atol=1e-6)
 
 
+def test_nnz_per_column_structural_matches_dense_count():
+    """The O(m²·d) structural count from indices/coef pins the old dense
+    count jnp.sum(S != 0, axis=0) — including index collisions and draws
+    whose signs cancel exactly (a zero in S, not a non-zero)."""
+    for i, (n, d, m) in enumerate([(50, 5, 1), (30, 8, 6), (10, 12, 8), (100, 10, 3)]):
+        sk = make_accum_sketch(jax.random.fold_in(KEY, 500 + i), n, d, m)
+        dense_count = jnp.sum(sk.dense() != 0, axis=0)      # the seed formula
+        np.testing.assert_array_equal(np.asarray(sk.nnz_per_column()),
+                                      np.asarray(dense_count))
+    # forced exact cancellation: two draws on the same row, opposite signs
+    sk = AccumSketch(indices=jnp.array([[0, 1], [0, 2]], jnp.int32),
+                     signs=jnp.array([[1.0, 1.0], [-1.0, 1.0]]),
+                     probs=jnp.full((5,), 0.2), n=5)
+    np.testing.assert_array_equal(np.asarray(sk.nnz_per_column()), [0, 2])
+    np.testing.assert_array_equal(np.asarray(jnp.sum(sk.dense() != 0, axis=0)),
+                                  [0, 2])
+
+
 def test_weighted_sampling_distribution_respected():
     probs = jnp.asarray([0.7] + [0.3 / 99] * 99)
     sk = make_accum_sketch(KEY, n=100, d=200, m=2, probs=probs)

@@ -1,0 +1,167 @@
+"""Property-based invariants of the accumulation sketch (paper Algorithm 1).
+
+Each invariant lives in a plain ``_check_*`` helper; the hypothesis property
+drives it over random shapes/seeds (via the ``hypothesis_compat`` shim — the
+suite skips cleanly where hypothesis is absent and runs for real on the CI
+hypothesis leg), and a deterministic smoke test drives the same helpers over
+pinned cases so the invariants stay exercised on every environment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis_compat import given, settings, st
+
+from repro.core.sketch import (
+    _compute_coef,
+    append_subsample,
+    make_accum_sketch,
+    make_accum_sketch_jit,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+# (n, d, m) cases for the Monte-Carlo unbiasedness check — a curated finite
+# set so the fixed-seed averages below are deterministic and pre-verified
+MC_CASES = [
+    (8, 2, 1), (16, 4, 2), (24, 8, 4), (32, 4, 1),
+    (12, 3, 6), (64, 16, 4), (16, 2, 3), (48, 12, 2),
+]
+
+
+# --------------------------------------------------------------------------- #
+# invariant helpers (plain functions — callable with or without hypothesis)
+# --------------------------------------------------------------------------- #
+
+def _check_unbiasedness(n, d, m, reps=200):
+    """E[S Sᵀ] = I_n at fixed seeds: the identity behind every sketch
+    estimator.  Averaged over ``reps`` deterministic draws."""
+    acc = np.zeros((n, n))
+    for i in range(reps):
+        key = jax.random.fold_in(jax.random.fold_in(KEY, 1000 * n + 10 * d + m), i)
+        S = np.asarray(make_accum_sketch(key, n, d, m).dense())
+        acc += S @ S.T
+    acc /= reps
+    diag = np.diag(acc)
+    off = acc - np.diag(diag)
+    assert abs(diag.mean() - 1.0) < 0.25, diag.mean()
+    assert abs(off.mean()) < 0.05, off.mean()
+
+
+def _check_normalization_identity(n, d, m, seed):
+    """The exact per-draw identity coef²·d·m·p[idx] = 1 (signs are ±1) —
+    what makes E[S Sᵀ] = I hold draw-by-draw, no Monte Carlo needed."""
+    sk = make_accum_sketch(jax.random.PRNGKey(seed), n, d, m)
+    p = np.asarray(jnp.take(sk.probs, sk.indices))
+    lhs = np.asarray(sk.coef) ** 2 * d * m * p
+    np.testing.assert_allclose(lhs, np.ones((m, d)), rtol=1e-5, atol=1e-5)
+
+
+def _check_append_truncate_roundtrip(n, d, m, seed):
+    """truncated(m) ∘ append_subsample is the identity on the original draw:
+    indices/signs restored exactly, cached coef up to the sqrt rescale."""
+    key = jax.random.PRNGKey(seed)
+    sk = make_accum_sketch(key, n, d, m)
+    grown = append_subsample(sk, jax.random.fold_in(key, 1))
+    assert grown.m == m + 1
+    back = grown.truncated(m)
+    np.testing.assert_array_equal(np.asarray(back.indices), np.asarray(sk.indices))
+    np.testing.assert_array_equal(np.asarray(back.signs), np.asarray(sk.signs))
+    np.testing.assert_array_equal(np.asarray(back.probs), np.asarray(sk.probs))
+    np.testing.assert_allclose(np.asarray(back.coef), np.asarray(sk.coef),
+                               rtol=1e-5, atol=1e-6)
+    assert back.n == sk.n
+
+
+def _check_coef_cache_consistency(n, d, m, seed):
+    """Every constructor's cached coef_ equals the _compute_coef recompute —
+    including through truncated()'s sqrt(M/m) rescale and with_coef()."""
+    key = jax.random.PRNGKey(seed)
+    for sk in [
+        make_accum_sketch(key, n, d, m),
+        make_accum_sketch_jit(key, n, d, m),
+        append_subsample(make_accum_sketch(key, n, d, m), jax.random.fold_in(key, 7)),
+    ]:
+        assert sk.coef_ is not None
+        np.testing.assert_allclose(
+            np.asarray(sk.coef_),
+            np.asarray(_compute_coef(sk.indices, sk.signs, sk.probs)),
+            rtol=1e-5, atol=1e-6)
+    grown = append_subsample(make_accum_sketch(key, n, d, m),
+                             jax.random.fold_in(key, 8))
+    for mm in range(1, grown.m + 1):
+        tr = grown.truncated(mm).with_coef()
+        assert tr.coef_ is not None
+        np.testing.assert_allclose(
+            np.asarray(tr.coef_),
+            np.asarray(_compute_coef(tr.indices, tr.signs, tr.probs)),
+            rtol=1e-5, atol=1e-6)
+
+
+def _check_dtype_preserved(n, d, m, dtype_name):
+    """signs/probs/coef dtype survives every constructor; indices stay int32."""
+    dtype = jnp.dtype(dtype_name)
+    for sk in [
+        make_accum_sketch(KEY, n, d, m, dtype=dtype),
+        make_accum_sketch_jit(KEY, n, d, m, dtype=dtype),
+    ]:
+        for arr in (sk.signs, sk.probs, sk.coef, sk.coef_):
+            assert arr.dtype == dtype, (arr.dtype, dtype)
+        assert sk.indices.dtype == jnp.int32
+        grown = append_subsample(sk, jax.random.fold_in(KEY, 3))
+        tr = grown.truncated(sk.m)
+        for derived in (grown, tr, tr.with_coef()):
+            for arr in (derived.signs, derived.probs, derived.coef):
+                assert arr.dtype == dtype, (arr.dtype, dtype)
+            assert derived.indices.dtype == jnp.int32
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis properties
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=8, deadline=None)
+@given(case=st.sampled_from(MC_CASES))
+def test_prop_unbiasedness_fixed_seeds(case):
+    _check_unbiasedness(*case)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 100), d=st.integers(1, 20), m=st.integers(1, 8),
+       seed=st.integers(0, 2**20))
+def test_prop_normalization_identity(n, d, m, seed):
+    _check_normalization_identity(n, d, m, seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 100), d=st.integers(1, 16), m=st.integers(1, 6),
+       seed=st.integers(0, 2**20))
+def test_prop_append_truncate_roundtrip(n, d, m, seed):
+    _check_append_truncate_roundtrip(n, d, m, seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 64), d=st.integers(1, 12), m=st.integers(1, 5),
+       seed=st.integers(0, 2**20))
+def test_prop_coef_cache_consistency(n, d, m, seed):
+    _check_coef_cache_consistency(n, d, m, seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, 64), d=st.integers(1, 12), m=st.integers(1, 5),
+       dtype_name=st.sampled_from(["float32", "bfloat16", "float16"]))
+def test_prop_dtype_preserved(n, d, m, dtype_name):
+    _check_dtype_preserved(n, d, m, dtype_name)
+
+
+# --------------------------------------------------------------------------- #
+# deterministic smoke coverage of the same invariants (runs everywhere)
+# --------------------------------------------------------------------------- #
+
+def test_invariants_pinned_cases():
+    _check_unbiasedness(16, 4, 2, reps=120)
+    for (n, d, m, seed) in [(20, 5, 1, 0), (33, 7, 4, 11), (64, 16, 2, 99)]:
+        _check_normalization_identity(n, d, m, seed)
+        _check_append_truncate_roundtrip(n, d, m, seed)
+        _check_coef_cache_consistency(n, d, m, seed)
+    for dt in ["float32", "bfloat16", "float16"]:
+        _check_dtype_preserved(12, 6, 3, dt)
