@@ -1,0 +1,147 @@
+"""Multi-device sharded sketching benchmark: weak + strong scaling of the
+data-parallel (C, W) computation at the matfree anchor shapes.
+
+Strong scaling: fixed n, grow the device count D — wall time per sharded
+``sketch_both`` and KRR fit, with the per-device peak C slab shrinking ∝ 1/D
+(the acceptance claim: each device holds only its ceil(n/D)·d rows of C, and
+its share of the kernel-eval tiles).  Weak scaling: n ∝ D at fixed per-device
+rows — time should stay ~flat while total n grows past what one device's C
+slab budget would allow.
+
+Device counts are the powers of two ≤ ``jax.device_count()`` — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE the first
+jax import; the CI bench-smoke leg does) to emulate 8 devices on CPU.  On a
+single unforced device only D=1 runs, which still exercises the shard_map
+plumbing.
+
+Run:   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+           PYTHONPATH=src python -m benchmarks.run distributed
+Smoke: append --smoke (tiny shapes, 1 rep; JSON tagged "smoke": true).
+
+Writes ``BENCH_distributed.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+
+from benchmarks.common import bimodal_data, emit, timeit
+from repro.core import distributed as D
+from repro.core.krr import krr_sketched_fit
+from repro.core.kernel_op import KernelOperator
+from repro.core.sketch import make_accum_sketch
+from repro.util import env_flag
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_distributed.json"
+
+# the matfree anchor shape (BENCH_matfree.json's mid n) for strong scaling;
+# weak scaling holds n/D at base_rows
+FULL = dict(n_strong=16384, base_rows=4096, d=64, m=4, n_test=2048,
+            bandwidth=0.75, lam=1e-3)
+SMOKE = dict(n_strong=1024, base_rows=256, d=16, m=2, n_test=64,
+             bandwidth=0.75, lam=1e-3)
+
+
+def bench_config() -> tuple[dict, int]:
+    if env_flag("REPRO_BENCH_SMOKE", False):
+        return SMOKE, 1
+    return FULL, 2
+
+
+def device_counts() -> list[int]:
+    avail = jax.device_count()
+    out = []
+    dd = 1
+    while dd <= min(avail, 8):
+        out.append(dd)
+        dd *= 2
+    return out
+
+
+def _per_device_C_bytes(n: int, d: int, Dn: int) -> int:
+    return (-(-n // Dn)) * d * 4
+
+
+def main() -> None:
+    cfg, reps = bench_config()
+    d, m = cfg["d"], cfg["m"]
+    key = jax.random.PRNGKey(0)
+    counts = device_counts()
+    results: dict = {}
+    memory: dict = {}
+
+    # ---- strong scaling: fixed n, growing D --------------------------------- #
+    n = cfg["n_strong"]
+    X, y, _ = bimodal_data(jax.random.fold_in(key, n), n)
+    op = KernelOperator(X, "gaussian", bandwidth=cfg["bandwidth"])
+    sk = make_accum_sketch(jax.random.fold_in(key, 2 * n), n, d, m)
+    Xt = X[: cfg["n_test"]] + 0.01
+    for Dn in counts:
+        mesh = D.make_data_mesh(Dn)
+        Xs = D.shard_rows(X, mesh)
+        ops = KernelOperator(Xs, "gaussian", bandwidth=cfg["bandwidth"])
+        tag = f"strong_n{n}_D{Dn}"
+        memory[tag] = {
+            "per_device_C_bytes": _per_device_C_bytes(n, d, Dn),
+            "ratio_vs_D1": _per_device_C_bytes(n, d, 1)
+            / _per_device_C_bytes(n, d, Dn),
+        }
+        t_cw = timeit(
+            jax.jit(lambda o, s, mesh=mesh: o.sketch_both(s, mesh=mesh)),
+            ops, sk, reps=reps)
+        emit(f"dist_sketch_both_{tag}", t_cw * 1e6,
+             f"per-device C {memory[tag]['per_device_C_bytes'] / 2**20:.2f} MiB "
+             f"({memory[tag]['ratio_vs_D1']:.0f}x below D=1)")
+        results[f"dist_sketch_both_{tag}"] = {"us": t_cw * 1e6}
+
+        def fit_predict(o=ops, yy=y, s=sk, Xq=Xt, mesh=mesh):
+            model = krr_sketched_fit(o, yy, cfg["lam"], s, mesh=mesh)
+            return model.predict(Xq, mesh=mesh)
+
+        t_fit = timeit(fit_predict, reps=reps)
+        emit(f"dist_krr_fit_predict_{tag}", t_fit * 1e6,
+             f"sharded fit+predict({cfg['n_test']})")
+        results[f"dist_krr_fit_predict_{tag}"] = {"us": t_fit * 1e6}
+
+    # ---- weak scaling: n = base_rows · D ------------------------------------ #
+    for Dn in counts:
+        n_w = cfg["base_rows"] * Dn
+        Xw, yw, _ = bimodal_data(jax.random.fold_in(key, 7 * n_w), n_w)
+        opw = KernelOperator(Xw, "gaussian", bandwidth=cfg["bandwidth"])
+        skw = make_accum_sketch(jax.random.fold_in(key, 3 * n_w), n_w, d, m)
+        mesh = D.make_data_mesh(Dn)
+        tag = f"weak_rows{cfg['base_rows']}_D{Dn}"
+        memory[tag] = {
+            "n": n_w,
+            "per_device_C_bytes": _per_device_C_bytes(n_w, d, Dn),
+        }
+        t_cw = timeit(
+            jax.jit(lambda o, s, mesh=mesh: o.sketch_both(s, mesh=mesh)),
+            opw, skw, reps=reps)
+        emit(f"dist_sketch_both_{tag}", t_cw * 1e6,
+             f"n={n_w}: per-device C fixed at "
+             f"{memory[tag]['per_device_C_bytes'] / 2**20:.2f} MiB")
+        results[f"dist_sketch_both_{tag}"] = {"us": t_cw * 1e6, "n": n_w}
+
+    payload = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "device_count": jax.device_count(),
+            "jax": jax.__version__,
+        },
+        "config": cfg,
+        "device_counts": counts,
+        "smoke": env_flag("REPRO_BENCH_SMOKE", False),
+        "results": results,
+        "memory": memory,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("bench_json", 0.0, f"wrote {BENCH_PATH.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -129,7 +129,7 @@ print(f"  fixed m=8   : pairwise agreement={pairwise_agreement(np.asarray(res_fi
       f"  ({8 * 32} rows touched)")
 res_ad = spectral_cluster(jax.random.fold_in(key, 321), K, k, d=32,
                           tol=0.2, m_max=16)
-print(f"  adaptive    : engine stopped at m={res_ad.info['m']} "
-      f"(est err {res_ad.info['err']:.3f}), pairwise agreement="
+print(f"  adaptive    : engine stopped at m={int(res_ad.info['m'])} "
+      f"(est err {float(res_ad.info['err']):.3f}), pairwise agreement="
       f"{pairwise_agreement(np.asarray(res_ad.labels)):.3f}"
-      f"  ({res_ad.info['m'] * 32} rows touched)")
+      f"  ({int(res_ad.info['m']) * 32} rows touched)")

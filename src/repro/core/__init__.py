@@ -27,6 +27,16 @@ from repro.core.apply import (
     unsketch_vec,
 )
 from repro.core.kernel_op import KernelOperator, stream_cols
+from repro.core.distributed import (
+    make_data_mesh,
+    shard_rows,
+    sharded_gram,
+    sharded_matvec,
+    sharded_sketch_both,
+    sharded_sketch_left,
+    sharded_take_rows,
+    sharded_weighted_cols,
+)
 from repro.core.krr import (
     SketchedKRR,
     insample_error,

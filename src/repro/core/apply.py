@@ -90,7 +90,8 @@ def unsketch_mat(sk: AccumSketch, W: jax.Array) -> jax.Array:
 
 
 def sketch_both(
-    K: jax.Array, sk: AccumSketch, *, use_kernel: bool | None = None
+    K: jax.Array, sk: AccumSketch, *, use_kernel: bool | None = None,
+    mesh=None,
 ) -> tuple[jax.Array, jax.Array]:
     """(K S, Sᵀ K S) sharing the K S intermediate, as in the paper.
 
@@ -99,8 +100,18 @@ def sketch_both(
     allocates the n×n matrix.  With ``use_kernel`` (auto: True on TPU) the
     dense pair is computed by the fused single-sweep Pallas kernel — one pass
     over K, W accumulated in-kernel — instead of two gather passes (the
-    operator routes through the fused kernel-eval→GEMM kernel instead)."""
+    operator routes through the fused kernel-eval→GEMM kernel instead).
+
+    ``mesh`` (a ``("data",)`` mesh / True / a device count — operator only)
+    row-shards X and C over the devices: per-device kernel-eval tiles, W
+    psum-reduced (``repro.core.distributed``)."""
     op = _operator(K)
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_sketch_both(D._operator_required(K), sk,
+                                     D.resolve_mesh(mesh),
+                                     use_kernel=use_kernel)
     if op is not None:
         return op.sketch_both(sk, use_kernel=use_kernel)
     if use_kernel is None:
@@ -161,8 +172,48 @@ def accum_init(key: jax.Array, n: int, d: int, m_max: int,
     )
 
 
+def slab_pieces(state: AccumState):
+    """(idx_new, coef_new, a) for folding slab number ``state.m``: the new
+    sub-sampling matrix's indices, its combination coefficients normalized
+    for the GROWN size m = t+1 (coef = r / sqrt(d (t+1) p)), and the
+    survivors' rescale a = sqrt(t/(t+1)) (t=0 → 0: C_1 = K T̃_1).
+
+    Shared by the dense and sharded (``repro.core.distributed``) engines so
+    the normalization cannot drift between them."""
+    t = state.m
+    tf = t.astype(jnp.float32)
+    d = state.d
+    idx_new = jax.lax.dynamic_index_in_dim(state.indices, t, axis=0,
+                                           keepdims=False)
+    sgn_new = jax.lax.dynamic_index_in_dim(state.signs, t, axis=0,
+                                           keepdims=False)
+    p_new = jnp.take(state.probs, idx_new).astype(jnp.float32)
+    coef_new = sgn_new.astype(jnp.float32) / jnp.sqrt(d * (tf + 1.0) * p_new)
+    a = jnp.sqrt(tf / (tf + 1.0))
+    return idx_new, coef_new, a
+
+
+def slab_w_update(state: AccumState, TtC: jax.Array, Ksub: jax.Array,
+                  coef_new: jax.Array, a: jax.Array) -> jax.Array:
+    """The W recurrence for one slab, from the d×d pieces:
+    W_{t+1} = a²·W_t + a·(T̃ᵀC + (T̃ᵀC)ᵀ) + T̃ᵀK T̃, exact-arithmetic
+    symmetrized.  Shared by the dense and sharded engines."""
+    TtKT = coef_new[:, None] * Ksub.astype(jnp.float32) * coef_new[None, :]
+    W_new = (a * a) * state.W + a * (TtC + TtC.T) + TtKT
+    return 0.5 * (W_new + W_new.T)
+
+
+def finish_grow(state: AccumState, m_max: int):
+    """The grow drivers' shared return contract: (sketch, C, W, info) with
+    jax-scalar info and the trace-safe masked sketch under a tracer."""
+    info = {"m": state.m, "m_max": m_max, "err": state.err}
+    if isinstance(state.m, jax.core.Tracer):
+        return state.masked_sketch(), state.C, state.W, info
+    return state.sketch(), state.C, state.W, info
+
+
 def accum_step(K: jax.Array, state: AccumState, *,
-               use_kernel: bool | None = None) -> AccumState:
+               use_kernel: bool | None = None, mesh=None) -> AccumState:
     """Fold ONE new sub-sampling matrix into (C, W): the rank-d incremental
     update, O(n·d) per step.
 
@@ -172,19 +223,17 @@ def accum_step(K: jax.Array, state: AccumState, *,
     evals.  With ``use_kernel`` (auto: True on TPU) the dense C update runs
     through the single-slab Pallas entry point (``sketch_step_kernel``) and
     the operator through the fused matfree kernel; the W pieces are d×d
-    gathers either way."""
+    gathers either way.  ``mesh`` (operator only) computes the slab's column
+    block per data shard and psum-reduces the T̃ᵀC gather."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_accum_step(K, state, mesh, use_kernel=use_kernel)
     op = _operator(K)
     if use_kernel is None:
         use_kernel = default_use_kernel()
     t = state.m
-    tf = t.astype(jnp.float32)
-    d = state.d
-    idx_new = jax.lax.dynamic_index_in_dim(state.indices, t, axis=0, keepdims=False)
-    sgn_new = jax.lax.dynamic_index_in_dim(state.signs, t, axis=0, keepdims=False)
-    p_new = jnp.take(state.probs, idx_new).astype(jnp.float32)
-    # T̃ is normalized for the grown size m = t+1: coef = r / sqrt(d (t+1) p)
-    coef_new = sgn_new.astype(jnp.float32) / jnp.sqrt(d * (tf + 1.0) * p_new)
-    a = jnp.sqrt(tf / (tf + 1.0))                      # t=0 → 0: C_1 = K T̃_1
+    idx_new, coef_new, a = slab_pieces(state)
 
     # W update from d×d gathers only:  T̃ᵀC_t and (T̃ᵀK T̃)[i,j] = c_i K[n_i,n_j] c_j
     TtC = coef_new[:, None] * jnp.take(state.C, idx_new, axis=0)
@@ -192,9 +241,7 @@ def accum_step(K: jax.Array, state: AccumState, *,
         Ksub = op.submatrix(idx_new, idx_new)
     else:
         Ksub = jnp.take(jnp.take(K, idx_new, axis=0), idx_new, axis=1)
-    TtKT = coef_new[:, None] * Ksub.astype(jnp.float32) * coef_new[None, :]
-    W_new = (a * a) * state.W + a * (TtC + TtC.T) + TtKT
-    W_new = 0.5 * (W_new + W_new.T)                    # exact-arithmetic symmetry
+    W_new = slab_w_update(state, TtC, Ksub, coef_new, a)
 
     if op is not None:
         G = op.weighted_cols(op.X, idx_new[None, :], coef_new[None, :],
@@ -213,8 +260,13 @@ def accum_step(K: jax.Array, state: AccumState, *,
 
 
 def accum_grow(K: jax.Array, state: AccumState, steps: int, *,
-               use_kernel: bool | None = None) -> AccumState:
+               use_kernel: bool | None = None, mesh=None) -> AccumState:
     """Unconditionally fold in ``steps`` more slabs (``lax.fori_loop``)."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_accum_grow(K, state, steps, mesh,
+                                    use_kernel=use_kernel)
     if use_kernel is None:
         use_kernel = default_use_kernel()
 
@@ -225,11 +277,18 @@ def accum_grow(K: jax.Array, state: AccumState, steps: int, *,
 
 
 def make_holdout_estimator(key: jax.Array, K: jax.Array, num: int = 64,
-                           *, jitter: float = 1e-6):
+                           *, jitter: float = 1e-6, mesh=None):
     """Plug-in stopping rule: relative Nyström-reconstruction error of the
     sketched operator K̂ = C W⁺ Cᵀ on a fixed random holdout principal
     submatrix — O(h²·d + d³) per evaluation, independent of n.  With a
-    ``KernelOperator`` the h×h holdout block comes from h² kernel evals."""
+    ``KernelOperator`` the h×h holdout block comes from h² kernel evals;
+    with ``mesh`` the C row gather additionally psum-reduces over the data
+    shards (same key → the same holdout draw)."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.make_sharded_holdout_estimator(key, K, mesh, num,
+                                                jitter=jitter)
     op = _operator(K)
     n = K.shape[0]
     hold = jax.random.choice(key, n, shape=(min(num, n),), replace=False)
@@ -249,13 +308,19 @@ def make_holdout_estimator(key: jax.Array, K: jax.Array, num: int = 64,
 
 
 def make_hutchinson_estimator(key: jax.Array, K: jax.Array, num_probes: int = 8,
-                              *, jitter: float = 1e-6):
+                              *, jitter: float = 1e-6, mesh=None):
     """Plug-in stopping rule: Hutchinson estimate of the relative trace
     residual tr(K − K̂)/tr̂(K) with Rademacher probes.  K Z is precomputed once
     (K is fixed while m grows), so each evaluation costs O(n·d·q + d³).  The
     Nyström residual of a PSD K is PSD, so the estimate is a true error.
     With a ``KernelOperator`` the one-time K Z is a streamed matvec —
-    O(n²·p·q) kernel-eval compute but O(chunk·n) memory, never n²."""
+    O(n²·p·q) kernel-eval compute but O(chunk·n) memory, never n²; with
+    ``mesh`` the matvec rows and every CᵀZ contraction stay per-shard."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.make_sharded_hutchinson_estimator(key, K, mesh, num_probes,
+                                                   jitter=jitter)
     op = _operator(K)
     n = K.shape[0]
     Z = jax.random.rademacher(key, (n, num_probes), dtype=jnp.float32)
@@ -277,10 +342,19 @@ def make_hutchinson_estimator(key: jax.Array, K: jax.Array, num_probes: int = 8,
 
 def accum_grow_adaptive(K: jax.Array, state: AccumState, *, tol: float,
                         estimator, check_every: int = 1,
-                        use_kernel: bool | None = None) -> AccumState:
+                        use_kernel: bool | None = None,
+                        mesh=None) -> AccumState:
     """Grow until ``estimator(state) ≤ tol`` or the pre-drawn ``m_max`` slabs
     are exhausted (``lax.while_loop``).  ``estimator`` maps AccumState → scalar
-    error; ``check_every > 1`` amortizes its cost over several growth steps."""
+    error; ``check_every > 1`` amortizes its cost over several growth steps.
+    With ``mesh`` pass a shard-aware estimator (``make_*_estimator(mesh=…)``)
+    — the loop states carry C padded up to the mesh."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_accum_grow_adaptive(
+            K, state, mesh, tol=tol, estimator=estimator,
+            check_every=check_every, use_kernel=use_kernel)
     if use_kernel is None:
         use_kernel = default_use_kernel()
     m_max = state.m_max
@@ -301,7 +375,7 @@ def grow_sketch_both(
     key: jax.Array, K: jax.Array, d: int, *, m_max: int = 32,
     tol: float | None = None, probs: jax.Array | None = None,
     signed: bool = True, estimator=None, check_every: int = 1,
-    use_kernel: bool | None = None,
+    use_kernel: bool | None = None, mesh=None,
 ) -> tuple[AccumSketch, jax.Array, jax.Array, dict]:
     """One-call driver: grow a sketch on K — a precomputed matrix OR a
     matrix-free ``KernelOperator`` — until the error target is met (or to
@@ -312,7 +386,25 @@ def grow_sketch_both(
     suboptimal (uniform / approximate-leverage) sampling schemes: grow m,
     keep the effective d×d size fixed.  ``estimator`` defaults to the holdout
     rule; pass ``make_hutchinson_estimator(...)`` (or any AccumState → scalar
-    callable) to swap the plug-in rule."""
+    callable) to swap the plug-in rule.
+
+    The whole driver is jittable: ``info``'s ``m``/``err`` are jax scalars
+    (NOT host ints — converting here would force a device sync on every call
+    and break tracing; examples/benchmarks convert at the printing edge), and
+    under a trace the returned sketch is the state's ``masked_sketch()`` —
+    static (m_max, d) shapes, zero-coefficient slabs beyond m, applies
+    identically to the truncation eager callers get.
+
+    ``mesh`` (operator only) runs the whole growth data-parallel: identical
+    index/holdout/probe draws (the RNG happens replicated, before anything is
+    sharded), per-shard slab kernel evals, psum reductions."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_grow_sketch_both(
+            key, K, d, mesh, m_max=m_max, tol=tol, probs=probs, signed=signed,
+            estimator=estimator, check_every=check_every,
+            use_kernel=use_kernel)
     n = K.shape[0]
     state = accum_init(key, n, d, m_max, probs, signed=signed)
     if tol is None:
@@ -323,8 +415,7 @@ def grow_sketch_both(
         state = accum_grow_adaptive(K, state, tol=tol, estimator=estimator,
                                     check_every=check_every,
                                     use_kernel=use_kernel)
-    info = {"m": int(state.m), "m_max": m_max, "err": float(state.err)}
-    return state.sketch(), state.C, state.W, info
+    return finish_grow(state, m_max)
 
 
 def sketch_kernel_cols(

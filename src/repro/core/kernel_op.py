@@ -124,8 +124,11 @@ class KernelOperator:
         return get_kernel(self.kernel, self.bandwidth, self.nu)
 
     def _auto_chunk(self, md: int) -> int:
-        # f32 slab (chunk, md) ≤ ~16 MiB
-        return max(256, (4 * 1024 * 1024) // max(md, 1))
+        # f32 slab (chunk, md) ≤ ~16 MiB.  The floor is the same small
+        # constant ``matvec`` uses — a 256-row floor would let the slab grow
+        # past the budget whenever m·d is large (a (256, 65536) f32 slab is
+        # 64 MiB), exactly the failure matvec's chunk comment warns about.
+        return max(8, (4 * 1024 * 1024) // max(md, 1))
 
     # -- kernel-block primitives ----------------------------------------------
     def submatrix(self, rows: jax.Array, cols: jax.Array) -> jax.Array:
@@ -136,12 +139,22 @@ class KernelOperator:
     def weighted_cols(
         self, Xq: jax.Array, idx: jax.Array, coef: jax.Array, *,
         chunk: int | None = None, use_kernel: bool | None = None,
+        mesh=None,
     ) -> jax.Array:
         """K(Xq, ·)·S for the sketch described by idx/coef (m, d) — the core
         primitive behind C, the engine's slab increments, and prediction.
 
         ``use_kernel`` (auto: True on TPU) routes through the fused Pallas
-        kernel-eval→GEMM kernel; otherwise the ``lax.scan`` streaming path."""
+        kernel-eval→GEMM kernel; otherwise the ``lax.scan`` streaming path.
+        ``mesh`` row-shards Xq over a ``("data",)`` device mesh: each device
+        computes its tile through the same backend with the landmarks
+        replicated (``repro.core.distributed``)."""
+        if mesh is not None:
+            from repro.core import distributed as D
+
+            return D.sharded_weighted_cols(
+                self, Xq, idx, coef, D.resolve_mesh(mesh), chunk=chunk,
+                use_kernel=use_kernel)
         if use_kernel is None:
             use_kernel = A.default_use_kernel()
         lm = jnp.take(self.X, idx.reshape(-1), axis=0)
@@ -149,42 +162,60 @@ class KernelOperator:
             from repro.kernels.accum_apply.ops import matfree_cols_kernel
             return matfree_cols_kernel(Xq, lm, coef, kernel=self.kernel,
                                        bandwidth=self.bandwidth, nu=self.nu)
-        if chunk is None and Xq.shape[0] > 4096:
+        if chunk is None:
+            # always budget by SLAB size, not row count: an (nq, m·d) slab
+            # blows the ~16 MiB budget at large m·d even when nq is small
+            # (nq ≤ _auto_chunk(m·d) degrades to a single unstreamed block,
+            # so small problems pay no scan overhead)
             chunk = self._auto_chunk(idx.size)
         return stream_cols(Xq, lm, coef, self.kernel_fn, chunk=chunk)
 
     # -- sketched applications ------------------------------------------------
     def sketch_cols(self, sk: AccumSketch, *, chunk: int | None = None,
-                    use_kernel: bool | None = None) -> jax.Array:
-        """C = K S (n, d) — O(n·m·d) kernel evaluations, O(n·d) memory."""
+                    use_kernel: bool | None = None, mesh=None) -> jax.Array:
+        """C = K S (n, d) — O(n·m·d) kernel evaluations, O(n·d) memory
+        (O(n/D · d) per device under ``mesh``)."""
         return self.weighted_cols(self.X, sk.indices, sk.coef, chunk=chunk,
-                                  use_kernel=use_kernel)
+                                  use_kernel=use_kernel, mesh=mesh)
 
     def cross_cols(self, Xq: jax.Array, sk: AccumSketch, *,
                    chunk: int | None = None,
-                   use_kernel: bool | None = None) -> jax.Array:
+                   use_kernel: bool | None = None, mesh=None) -> jax.Array:
         """K(Xq, X)·S (nq, d) — the matrix-free predict path: test rows only
         ever meet the m·d landmark rows, never the training Gram matrix."""
         return self.weighted_cols(Xq, sk.indices, sk.coef, chunk=chunk,
-                                  use_kernel=use_kernel)
+                                  use_kernel=use_kernel, mesh=mesh)
 
     def sketch_both(
         self, sk: AccumSketch, *, chunk: int | None = None,
-        use_kernel: bool | None = None,
+        use_kernel: bool | None = None, mesh=None,
     ) -> tuple[jax.Array, jax.Array]:
         """(C, W) = (K S, SᵀK S) without forming K.
 
         W = SᵀC is a row gather of the already-computed C (the sketch's
         non-zero rows are exactly the landmark rows), so it costs O(m·d²) on
         top of C — the same arithmetic as the dense path, which is what the
-        golden dense ≡ matrix-free equivalence tests pin."""
+        golden dense ≡ matrix-free equivalence tests pin.  ``mesh`` computes
+        both per data shard in one mapped launch (W psum-reduced)."""
+        if mesh is not None:
+            from repro.core import distributed as D
+
+            return D.sharded_sketch_both(self, sk, D.resolve_mesh(mesh),
+                                         chunk=chunk, use_kernel=use_kernel)
         C = self.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
         return C, A.sketch_left(sk, C)
 
-    def matvec(self, Z: jax.Array, *, chunk: int | None = None) -> jax.Array:
+    def matvec(self, Z: jax.Array, *, chunk: int | None = None,
+               mesh=None) -> jax.Array:
         """K @ Z streamed over row chunks — O(chunk·n) peak memory, O(n²·p)
         compute.  Only for estimators that genuinely need full matvecs
-        (Hutchinson probes); sketched paths never call this."""
+        (Hutchinson probes); sketched paths never call this.  ``mesh``
+        splits the row streaming over the data shards."""
+        if mesh is not None:
+            from repro.core import distributed as D
+
+            return D.sharded_matvec(self, Z, D.resolve_mesh(mesh),
+                                    chunk=chunk)
         Zm = Z[:, None] if Z.ndim == 1 else Z
         n = self.n
         if chunk is None:

@@ -5,7 +5,7 @@ All functions map (n, p), (m, p) -> (n, m) and are jit/vmap friendly.
 from __future__ import annotations
 
 import math
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +43,8 @@ def matern_kernel(A, B, bandwidth: float = 1.0, nu: float = 1.5):
     raise ValueError(f"unsupported nu={nu}")
 
 
-def get_kernel(name: str, bandwidth: float = 1.0, nu: float = 1.5):
+@lru_cache(maxsize=None)
+def _get_kernel_cached(name: str, bandwidth: float, nu: float):
     if name == "gaussian":
         return partial(gaussian_kernel, bandwidth=bandwidth)
     if name == "laplacian":
@@ -51,3 +52,13 @@ def get_kernel(name: str, bandwidth: float = 1.0, nu: float = 1.5):
     if name == "matern":
         return partial(matern_kernel, bandwidth=bandwidth, nu=nu)
     raise ValueError(f"unknown kernel {name}")
+
+
+def get_kernel(name: str, bandwidth: float = 1.0, nu: float = 1.5):
+    """Kernel callable for a (name, bandwidth, nu) config — CACHED, so equal
+    configs return the IDENTICAL object.  ``functools.partial`` compares by
+    identity, and the callable rides in pytree aux data (``SketchedKRR``), so
+    a fresh partial per call would make two models fitted through equal
+    operators carry unequal treedefs — un-stackable, un-vmappable, and a jit
+    retrace per model."""
+    return _get_kernel_cached(name, float(bandwidth), float(nu))

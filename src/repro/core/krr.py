@@ -66,6 +66,7 @@ def krr_exact_fitted(K: jax.Array, y: jax.Array, lam: float) -> jax.Array:
 # Sketched KRR
 # --------------------------------------------------------------------------- #
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class SketchedKRR:
     """Fitted sketched-KRR model. predict() is O(n_test · m · d).
@@ -73,7 +74,14 @@ class SketchedKRR:
     ``op`` carries the matrix-free ``KernelOperator`` when the model was fit
     through one; predict then routes K(X_test, landmarks)·θ through the
     operator (fused Pallas path on TPU) — test rows never meet an n×n
-    matrix."""
+    matrix.
+
+    Registered as a pytree (array-bearing fields are leaves, ``kernel_fn`` is
+    aux) so models pass through ``jax.jit``/``vmap``/``shard_map`` boundaries:
+    ``jax.jit(SketchedKRR.predict)(model, X)`` traces instead of failing on
+    the unregistered dataclass, and fitted models can be batched or carried
+    through scans.  ``info`` rides as a leaf subtree, not aux — its ``m``/
+    ``err`` values are jax scalars (traced under jit on the adaptive paths)."""
 
     theta: jax.Array                   # (d,) dual coefficients in sketch space
     sk: AccumSketch | None             # structural sketch (None for dense S)
@@ -84,9 +92,25 @@ class SketchedKRR:
     info: dict | None = None           # adaptive-fit stats {"m", "err", ...}
     op: "KernelOperator | None" = None  # matrix-free operator (predict routing)
 
-    def predict(self, X_test: jax.Array) -> jax.Array:
+    def tree_flatten(self):
+        children = (self.theta, self.sk, self.S_dense, self.X_train,
+                    self.fitted, self.info, self.op)
+        return children, (self.kernel_fn,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        theta, sk, S_dense, X_train, fitted, info, op = children
+        return cls(theta=theta, sk=sk, S_dense=S_dense, X_train=X_train,
+                   kernel_fn=aux[0], fitted=fitted, info=info, op=op)
+
+    def predict(self, X_test: jax.Array, *, mesh=None) -> jax.Array:
         if self.op is not None and self.sk is not None:
-            return self.op.cross_cols(X_test, self.sk) @ self.theta
+            return self.op.cross_cols(X_test, self.sk, mesh=mesh) @ self.theta
+        if mesh is not None:
+            # every other mesh entry point raises for non-operator inputs;
+            # silently running single-device here would be a lie
+            raise ValueError("mesh= predict requires a model fitted through "
+                             "a KernelOperator")
         assert self.X_train is not None and self.kernel_fn is not None
         if self.sk is not None:
             # landmarks come from the TRAINING rows (the sketch indexes X_train;
@@ -102,19 +126,30 @@ class SketchedKRR:
         return C_test @ self.theta
 
 
-def _fit_from_C(C: jax.Array, W: jax.Array, y: jax.Array, lam: float):
-    """Given C = K S (n,d) and W = SᵀKS (d,d), solve the Woodbury system."""
+def _fit_from_C(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
+                mesh=None):
+    """Given C = K S (n,d) and W = SᵀKS (d,d), solve the Woodbury system.
+
+    With ``mesh`` (row-sharded C) the two n-contractions reduce via psum —
+    the d×d solve and the row-wise fitted values need no communication."""
     n = C.shape[0]
-    M = C.T @ C + n * lam * W                  # SᵀK²S + nλ SᵀKS
-    rhs = C.T @ y                              # SᵀK Y  (K symmetric)
-    theta = _solve_psd(M, rhs)
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        CtC = D.sharded_gram(C, C, mesh)
+        rhs = D.sharded_gram(C, y[:, None], mesh)[:, 0]
+    else:
+        CtC = C.T @ C
+        rhs = C.T @ y                          # SᵀK Y  (K symmetric)
+    M = CtC + n * lam * W                      # SᵀK²S + nλ SᵀKS
+    theta = _solve_psd(M, rhs.astype(M.dtype))
     return theta, C @ theta
 
 
 def krr_sketched_fit(
     K: jax.Array, y: jax.Array, lam: float, sk: AccumSketch,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
-    *, use_kernel: bool | None = None,
+    *, use_kernel: bool | None = None, mesh=None,
 ) -> SketchedKRR:
     """Structural path on K — a precomputed matrix or a matrix-free
     ``KernelOperator``: C and W in one pass, O(n·m·d).
@@ -123,10 +158,15 @@ def krr_sketched_fit(
     single-sweep Pallas kernel instead of two XLA gather passes; an operator
     routes through the fused kernel-eval→GEMM kernel and never forms K.
     With an operator, predict() is wired up automatically (no X_train /
-    kernel_fn needed)."""
+    kernel_fn needed).
+
+    ``mesh`` (operator only) row-shards X and C over a ``("data",)`` device
+    mesh: per-device kernel-eval tiles, with W = SᵀC, CᵀC, and Cᵀy reducing
+    across shards — only d-vectors and d×d blocks cross devices, so the
+    Woodbury solve and predict are unchanged."""
     op = A._operator(K)
-    C, W = A.sketch_both(K, sk, use_kernel=use_kernel)
-    theta, fitted = _fit_from_C(C, W, y, lam)
+    C, W = A.sketch_both(K, sk, use_kernel=use_kernel, mesh=mesh)
+    theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted, op=op)
     return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted)
@@ -144,7 +184,9 @@ def krr_sketched_fit_dense(
 
 
 def _sketch_left_routed(sk, C, use_kernel: bool | None):
-    """W = Sᵀ C through the Pallas GEMM kernel (auto on TPU) or XLA gathers."""
+    """W = Sᵀ C through the Pallas left-apply kernel (auto on TPU) or XLA
+    gathers (the mesh paths get W from the fused ``sharded_sketch_both``
+    launch instead — no second pass over C)."""
     if use_kernel is None:
         use_kernel = A.default_use_kernel()
     if use_kernel:
@@ -156,7 +198,7 @@ def _sketch_left_routed(sk, C, use_kernel: bool | None):
 def krr_sketched_fit_matfree(
     X, y: jax.Array, lam: float, sk: AccumSketch,
     kernel_fn: Callable | None = None, *, chunk: int | None = None,
-    use_kernel: bool | None = None,
+    use_kernel: bool | None = None, mesh=None,
 ) -> SketchedKRR:
     """Matrix-free path: never forms K. C = K S from O(n·m·d) kernel evals;
     W = Sᵀ C is a row gather of C (routed through the Pallas kernel on TPU).
@@ -164,45 +206,71 @@ def krr_sketched_fit_matfree(
 
     ``X`` may be the raw (n, p) data with an explicit ``kernel_fn`` callable,
     or a ``KernelOperator`` (kernel_fn omitted) — the operator additionally
-    unlocks the fused Pallas kernel-eval→GEMM path for C."""
+    unlocks the fused Pallas kernel-eval→GEMM path for C, and ``mesh``
+    (operator only) shards the whole fit over a data mesh."""
     op = A._operator(X)
+    if mesh is not None and op is None:
+        raise ValueError("mesh= sharding requires a KernelOperator input")
     if op is not None:
-        C = op.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
+        if mesh is not None:
+            # fused single launch: W gathered in-body, no second pass over C
+            C, W = op.sketch_both(sk, chunk=chunk, use_kernel=use_kernel,
+                                  mesh=mesh)
+        else:
+            C = op.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
+            W = _sketch_left_routed(sk, C, use_kernel)
         X, kernel_fn = op.X, op.kernel_fn
     else:
         C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
-    W = _sketch_left_routed(sk, C, use_kernel)
+        W = _sketch_left_routed(sk, C, use_kernel)
     # symmetrize W: SᵀKS is symmetric in exact arithmetic
     W = 0.5 * (W + W.T)
-    theta, fitted = _fit_from_C(C, W, y, lam)
+    theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
     return SketchedKRR(theta, sk, None, X, kernel_fn, fitted, op=op)
 
 
 def _pcg_solve(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
-               iters: int) -> jax.Array:
+               iters: int, mesh=None) -> jax.Array:
     """Preconditioned CG on the Woodbury system (CᵀC + nλ W) θ = Cᵀy with the
-    Cholesky of (W + jitter) as preconditioner.  Never materializes CᵀC."""
+    Cholesky of (W + jitter) as preconditioner.  Never materializes CᵀC.
+
+    With ``mesh`` (row-sharded C) each CG iteration stays communication-thin:
+    C@t is a per-shard matvec, Cᵀ(·) a psum of d-vectors — the preconditioner
+    solve and every other CG vector is d-sized and replicated."""
     n, d = C.shape
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        def _ct(v):
+            return D.sharded_gram(C, v[:, None], mesh)[:, 0]
+    else:
+        def _ct(v):
+            return C.T @ v
     jitter = 1e-8 * (jnp.trace(W) / d + 1e-30)
     L, lower = jax.scipy.linalg.cho_factor(
         W + jitter * jnp.eye(d, dtype=W.dtype), lower=True)
 
     def matvec(t):
-        return C.T @ (C @ t) + n * lam * (W @ t)
+        return _ct(C @ t) + n * lam * (W @ t)
 
     def precond(r):
         # (nλ W)⁻¹ ≈ the dominant small-eigenvalue part of the operator
         return jax.scipy.linalg.cho_solve((L, lower), r) / (n * lam)
 
-    rhs = C.T @ y
-    theta, _ = jax.scipy.sparse.linalg.cg(matvec, rhs, M=precond, maxiter=iters)
+    rhs = _ct(y)
+    # tol below f32 CG's stagnation floor: iterate to maxiter (or stagnation)
+    # rather than parking at cg's loose 1e-5 default — the solutions two
+    # reduction orders converge to must agree to ≤ 1e-5, not just their
+    # residual norms
+    theta, _ = jax.scipy.sparse.linalg.cg(matvec, rhs, M=precond,
+                                          maxiter=iters, tol=1e-7)
     return theta
 
 
 def krr_sketched_fit_pcg(
     X, y: jax.Array, lam: float, sk: AccumSketch,
     kernel_fn: Callable | None = None, *, iters: int = 30,
-    chunk: int | None = None, use_kernel: bool | None = None,
+    chunk: int | None = None, use_kernel: bool | None = None, mesh=None,
 ) -> SketchedKRR:
     """Falkon-flavoured solver (Rudi et al. 2017) on the accumulation sketch:
     preconditioned CG on the Woodbury system
@@ -215,16 +283,25 @@ def krr_sketched_fit_pcg(
     would factor an (md)×(md) system. O(n·m·d·iters), never forms K, and never
     materializes CᵀC (CG touches it only through matvecs).
 
-    ``X``: raw data + ``kernel_fn`` callable, or a ``KernelOperator``."""
+    ``X``: raw data + ``kernel_fn`` callable, or a ``KernelOperator``
+    (required for ``mesh`` sharding)."""
     op = A._operator(X)
+    if mesh is not None and op is None:
+        raise ValueError("mesh= sharding requires a KernelOperator input")
     if op is not None:
-        C = op.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
+        if mesh is not None:
+            # fused single launch: W gathered in-body, no second pass over C
+            C, W = op.sketch_both(sk, chunk=chunk, use_kernel=use_kernel,
+                                  mesh=mesh)
+        else:
+            C = op.sketch_cols(sk, chunk=chunk, use_kernel=use_kernel)
+            W = _sketch_left_routed(sk, C, use_kernel)
         X, kernel_fn = op.X, op.kernel_fn
     else:
         C = A.sketch_kernel_cols(X, sk, kernel_fn, chunk=chunk)
-    W = _sketch_left_routed(sk, C, use_kernel)
+        W = _sketch_left_routed(sk, C, use_kernel)
     W = 0.5 * (W + W.T)
-    theta = _pcg_solve(C, W, y, lam, iters)
+    theta = _pcg_solve(C, W, y, lam, iters, mesh=mesh)
     return SketchedKRR(theta, sk, None, X, kernel_fn, C @ theta, op=op)
 
 
@@ -237,7 +314,7 @@ def krr_sketched_fit_adaptive(
     tol: float = 1e-2, m_max: int = 32, probs: jax.Array | None = None,
     estimator=None, check_every: int = 1,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
-    use_kernel: bool | None = None,
+    use_kernel: bool | None = None, mesh=None,
 ) -> SketchedKRR:
     """Sketched KRR with the sketch size chosen by the progressive engine:
     grow m one slab at a time (O(n·d) incremental (C, W) updates) until the
@@ -249,12 +326,13 @@ def krr_sketched_fit_adaptive(
     probabilities simply buy more slabs.  ``K`` may be dense or a
     ``KernelOperator`` (the engine then grows matrix-free: each slab is an
     O(n·d) kernel-eval column block, the holdout estimator a principal
-    submatrix of kernel evals)."""
+    submatrix of kernel evals), and ``mesh`` (operator only) runs the whole
+    growth data-parallel with identical index draws."""
     op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
-        check_every=check_every, use_kernel=use_kernel)
-    theta, fitted = _fit_from_C(C, W, y, lam)
+        check_every=check_every, use_kernel=use_kernel, mesh=mesh)
+    theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted,
                            info=info, op=op)
@@ -266,17 +344,17 @@ def krr_sketched_fit_pcg_adaptive(
     tol: float = 1e-2, m_max: int = 32, iters: int = 30,
     probs: jax.Array | None = None, estimator=None, check_every: int = 1,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
-    use_kernel: bool | None = None,
+    use_kernel: bool | None = None, mesh=None,
 ) -> SketchedKRR:
     """Adaptive-m Falkon-style PCG: the progressive engine grows (C, W) to the
     error target, then CG reuses the incremental pair directly — the d×d
     preconditioner never changes size while m grows (paper §3.3).  ``K`` may
-    be dense or a matrix-free ``KernelOperator``."""
+    be dense or a matrix-free ``KernelOperator`` (required for ``mesh``)."""
     op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
-        check_every=check_every, use_kernel=use_kernel)
-    theta = _pcg_solve(C, W, y, lam, iters)
+        check_every=check_every, use_kernel=use_kernel, mesh=mesh)
+    theta = _pcg_solve(C, W, y, lam, iters, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, C @ theta,
                            info=info, op=op)

@@ -277,3 +277,24 @@ class AccumState:
         full = AccumSketch(indices=self.indices, signs=self.signs,
                            probs=self.probs, n=self.n)
         return full.truncated(m).with_coef()
+
+    def masked_sketch(self) -> AccumSketch:
+        """Trace-safe equivalent of ``sketch()``: the FULL (m_max, d) sketch
+        with slabs ≥ m zero-masked and the survivors renormalized for the
+        accumulated size m (coef = r/sqrt(d·m·p)).
+
+        Every structural application is bilinear in ``coef`` (K S, Sᵀ M,
+        stream_cols, dense()), so zero-coefficient slabs contribute nothing
+        and the masked sketch applies EXACTLY like ``sketch()``'s truncation —
+        but with static shapes, so it works when ``m`` is a tracer (jitted
+        ``grow_sketch_both`` drivers).  Note ``.m`` reads m_max on the result;
+        the accumulated count lives in the caller's ``info["m"]``."""
+        mf = jnp.maximum(self.m.astype(jnp.float32), 1.0)
+        p = jnp.take(self.probs, self.indices, axis=0).astype(jnp.float32)
+        coef = self.signs.astype(jnp.float32) / jnp.sqrt(self.d * mf * p)
+        mask = jnp.arange(self.m_max)[:, None] < self.m
+        return AccumSketch(
+            indices=self.indices,
+            signs=jnp.where(mask, self.signs, 0.0),
+            probs=self.probs, n=self.n,
+            coef_=jnp.where(mask, coef, 0.0))

@@ -175,7 +175,7 @@ def spectral_cluster(
     m: int | None = None, tol: float | None = None, m_max: int = 32,
     probs: jax.Array | None = None, normalized: bool = True,
     use_kernel: bool | None = None, kmeans_restarts: int = 4,
-    kmeans_iters: int = 25,
+    kmeans_iters: int = 25, mesh=None,
 ) -> SpectralResult:
     """Sketched spectral clustering of the affinity matrix K.
 
@@ -189,17 +189,23 @@ def spectral_cluster(
     of ``m`` (fixed sketch size, fused ``sketch_both`` kernel path) or ``tol``
     (error target, progressive accumulation engine picks m ≤ m_max) should be
     given; ``m=None, tol=None`` defaults to the fixed fused path at m=m_max.
+
+    ``mesh`` (operator only) computes (C, W) — the only n·m·d-sized work —
+    data-parallel over a ``("data",)`` device mesh with identical sketch
+    draws; the O(n·d²) eigenvector lift and k-means run on the row-sharded
+    (n, d) pair unchanged.
     """
     ksk, kkm = jax.random.split(key)
     if tol is not None:
         if m is not None:
             raise ValueError("pass either m= or tol=, not both")
         sk, C, W, info = A.grow_sketch_both(
-            ksk, K, d, m_max=m_max, tol=tol, probs=probs, use_kernel=use_kernel)
+            ksk, K, d, m_max=m_max, tol=tol, probs=probs,
+            use_kernel=use_kernel, mesh=mesh)
     else:
         sk = make_accum_sketch(ksk, K.shape[0], d, m_max if m is None else m,
                                probs)
-        C, W = A.sketch_both(K, sk, use_kernel=use_kernel)
+        C, W = A.sketch_both(K, sk, use_kernel=use_kernel, mesh=mesh)
         info = {"m": sk.m, "m_max": m_max, "err": float("nan")}
     eigvals, U = sketched_spectral_embedding(
         C.astype(jnp.float32), W.astype(jnp.float32), n_clusters,

@@ -200,6 +200,63 @@ def accum_sketch_both(
 
 
 # --------------------------------------------------------------------------- #
+# Sᵀ·M — true left-apply, M streamed in ROW tiles (no Mᵀ copy)
+# --------------------------------------------------------------------------- #
+
+def _left_kernel(idx_ref, coef_ref, M_ref, out_ref, *, m: int, bn: int, d: int):
+    t = pl.program_id(0)
+    # dense (bn, d) block of S covering S rows [t·bn, (t+1)·bn): each sketch
+    # index lands in exactly one row tile, so the per-tile partial products
+    # Sᵀ_tile · M_tile sum to Sᵀ M with no masking
+    sblk = _coef_block(idx_ref, coef_ref, base=t * bn, nrows=bn,
+                       j0=0, ncols=d, m=m)                        # (bn, d)
+    part = jax.lax.dot_general(
+        sblk, M_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                             # (d, c)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(t > 0)
+    def _accum():
+        out_ref[...] = out_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def accum_apply_left(
+    M: jax.Array, idx: jax.Array, coef: jax.Array, *,
+    bn: int = 2048, interpret: bool = True,
+) -> jax.Array:
+    """Sᵀ M for M of shape (N, c) → (d, c), streaming M in ROW tiles.
+
+    The transpose-free counterpart of ``accum_apply``: M keeps its row-major
+    layout (the layout the row-tiled kernels produce C in), each grid step
+    contracts the tile's dense (bn, d) one-hot block of S against the (bn, c)
+    M tile, and the (d, c) output is revisited and accumulated across steps —
+    the same pattern as the fused kernel's W accumulation.  N must tile by bn
+    (the ops.py wrapper pads)."""
+    N, c = M.shape
+    m, d = idx.shape
+    bn = min(bn, N)
+    assert N % bn == 0, (N, bn)
+    grid = (N // bn,)
+    return pl.pallas_call(
+        functools.partial(_left_kernel, m=m, bn=bn, d=d),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,             # idx, coef in SMEM
+            grid=grid,
+            in_specs=[pl.BlockSpec((bn, c), lambda t, *_: (t, 0))],
+            out_specs=pl.BlockSpec((d, c), lambda t, *_: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((d, c), jnp.float32),
+        interpret=interpret,
+    )(idx, coef, M)
+
+
+# --------------------------------------------------------------------------- #
 # single-slab progressive step — C ← a·C + K·T̃ in one fused pass
 # --------------------------------------------------------------------------- #
 

@@ -13,7 +13,8 @@ This layer makes the kernels shape- and backend-agnostic:
     O(1) in the number of chunks — the seed's Python loop unrolled one
     pallas_call per chunk under jit;
   * ``sketch_both_kernel`` exposes the fused (K S, SᵀK S) single-sweep kernel,
-    ``sketch_left_kernel`` applies Sᵀ via the same GEMM kernel on Mᵀ;
+    ``sketch_left_kernel`` applies Sᵀ M through the true left-apply kernel
+    (M streamed in row tiles — no Mᵀ copy);
   * ``sketch_step_kernel`` is the single-slab accumulate entry point used by
     the progressive engine: a·C + K·T̃ in one fused launch (MXU path for the
     m → m+1 increment).
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 from repro.core.sketch import AccumSketch
 from repro.kernels.accum_apply.kernel import (
     accum_apply,
+    accum_apply_left,
     accum_sketch_both,
     accum_step_slab,
     matfree_apply,
@@ -145,11 +147,31 @@ def sketch_right_kernel(
 
 
 def sketch_left_kernel(
-    sk: AccumSketch, M: jax.Array, *, bm: int | None = None,
-    bd: int | None = None, interpret: bool | None = None,
+    sk: AccumSketch, M: jax.Array, *, bn: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Sᵀ M (d, c) through the same GEMM kernel: Sᵀ M = (Mᵀ S)ᵀ."""
-    return sketch_right_kernel(M.T, sk, bm=bm, bd=bd, interpret=interpret).T
+    """Sᵀ M (d, c) via the true left-apply kernel, M streamed in row tiles.
+
+    The earlier implementation computed (Mᵀ S)ᵀ, materializing Mᵀ — an
+    O(n·c) transposed copy in a column-major layout the row-tiled kernel was
+    never tuned for.  ``accum_apply_left`` keeps M row-major and accumulates
+    the (d, c) output across row tiles instead.  Returns float32 (the output
+    feeds d×d solves)."""
+    if interpret is None:
+        interpret = default_interpret()
+    N, c = M.shape
+    d = sk.d
+    coef = sk.coef.astype(jnp.float32)
+    if bn is None:
+        # row tile bounded by ~8 MiB of VMEM for the M tile; the interpreter
+        # wants few large steps (per-step dispatch dominates there)
+        bn = min(4096 if interpret else 2048,
+                 max(8, (2 * 1024 * 1024) // max(c, 1)))
+    bn_e = min(bn, N)
+    Mp = _pad_rows(M, bn_e)
+    idx_p, coef_p = _pad_sketch(sk.indices, coef, min(8, max(d, 1)))
+    out = accum_apply_left(Mp, idx_p, coef_p, bn=bn_e, interpret=interpret)
+    return out[:d]
 
 
 def sketch_step_kernel(

@@ -44,3 +44,13 @@ def sketch_both_ref(
     rows = rows.reshape(*idx.shape, C32.shape[1])           # (m, d, d)
     W = jnp.einsum("mdc,md->dc", rows, coef.astype(jnp.float32))
     return C32.astype(K.dtype), W
+
+
+def sketch_left_ref(idx: jax.Array, coef: jax.Array, M: jax.Array) -> jax.Array:
+    """Oracle for the left-apply kernel: Sᵀ M via row gather + contraction.
+
+    out[j, :] = Σ_{i<m} coef[i, j] · M[idx[i, j], :].  Returns float32."""
+    rows = jnp.take(M, idx.reshape(-1), axis=0)             # (m·d, c)
+    rows = rows.reshape(*idx.shape, M.shape[-1])            # (m, d, c)
+    return jnp.einsum("mdc,md->dc", rows.astype(jnp.float32),
+                      coef.astype(jnp.float32))

@@ -121,6 +121,65 @@ def test_sketch_left_kernel_matches_dense():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,d,m,c", [(256, 8, 1, 16), (512, 32, 4, 32),
+                                     (300, 12, 3, 7), (128, 19, 2, 5)])
+def test_sketch_left_kernel_sweep(N, d, m, c, dtype):
+    """True left-apply vs the ref oracle across shapes × dtypes (incl. shapes
+    where nothing tiles — the ops wrapper pads rows and sketch columns)."""
+    from repro.kernels.accum_apply.ref import sketch_left_ref
+
+    sk = make_accum_sketch(jax.random.fold_in(KEY, N + d + m), N, d, m)
+    M = jax.random.normal(jax.random.fold_in(KEY, c), (N, c), dtype)
+    ref = sketch_left_ref(sk.indices, sk.coef, M)
+    out = sketch_left_kernel(sk, M)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_sketch_left_kernel_multi_tile_accumulation():
+    """N larger than the row tile: partial products accumulate across grid
+    steps (the out block is revisited, as in the fused kernel's W)."""
+    from repro.kernels.accum_apply.ref import sketch_left_ref
+
+    N, d, m, c = 5000, 16, 4, 24
+    sk = make_accum_sketch(jax.random.fold_in(KEY, 91), N, d, m)
+    M = jax.random.normal(KEY, (N, c), jnp.float32)
+    ref = sketch_left_ref(sk.indices, sk.coef, M)
+    out = sketch_left_kernel(sk, M, bn=512)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_left_kernel_never_transposes_M():
+    """The regression that motivated the rewrite: the old path computed
+    (Mᵀ S)ᵀ, binding an O(n·c) transposed copy of M.  The traced program must
+    contain no (c, N)-shaped buffer."""
+    N, c = 300, 7
+    sk = make_accum_sketch(jax.random.fold_in(KEY, 77), N, 12, 3)
+    M = jax.random.normal(KEY, (N, c), jnp.float32)
+
+    def all_shapes(jaxpr, acc):
+        for eqn in jaxpr.eqns:
+            for v in tuple(eqn.invars) + tuple(eqn.outvars):
+                shape = getattr(getattr(v, "aval", None), "shape", None)
+                if shape is not None:
+                    acc.add(tuple(shape))
+            for param in eqn.params.values():
+                subs = param if isinstance(param, (tuple, list)) else (param,)
+                for sub in subs:
+                    if hasattr(sub, "eqns"):
+                        all_shapes(sub, acc)
+                    elif hasattr(sub, "jaxpr"):
+                        all_shapes(sub.jaxpr, acc)
+        return acc
+
+    shapes = all_shapes(jax.make_jaxpr(
+        lambda M: sketch_left_kernel(sk, M))(M).jaxpr, set())
+    assert not any(s[:2] == (c, N) for s in shapes if len(s) >= 2), shapes
+
+
 def test_interpret_autodetect_and_autotune():
     """Backend autodetection (no TPU in CI → interpreter) and the block table
     covering the benchmark anchor shape."""

@@ -224,3 +224,69 @@ def test_pcg_falkon_matches_direct_solve():
                                rtol=3e-2, atol=3e-2)
     assert float(insample_error(pcg.fitted, fn)) < 2.0 * float(
         insample_error(direct.fitted, fn)) + 1e-6
+
+
+def test_sketched_krr_is_a_pytree():
+    """The fitted model must trace through jit/vmap boundaries: pass it AS AN
+    ARGUMENT (the unregistered dataclass failed here), roundtrip its leaves,
+    and pin jit(predict) ≡ eager on both the structural and operator paths."""
+    from repro.core.kernel_op import KernelOperator
+    from repro.core.krr import SketchedKRR
+
+    X, y, _ = _toy(n=200)
+    kern = get_kernel("gaussian", bandwidth=0.75)
+    sk = make_accum_sketch(KEY, 200, 12, 3)
+    Xt = X[:31] + 0.01
+
+    for model in (
+        krr_sketched_fit(kern(X, X), y, 1e-3, sk, X, kern),
+        krr_sketched_fit(KernelOperator(X, "gaussian", bandwidth=0.75),
+                         y, 1e-3, sk),
+    ):
+        leaves, treedef = jax.tree_util.tree_flatten(model)
+        assert any(l.shape == model.theta.shape for l in leaves)
+        model2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_array_equal(np.asarray(model2.theta),
+                                      np.asarray(model.theta))
+        # jit with the model as a traced argument, not a closure constant
+        jitted = jax.jit(SketchedKRR.predict)(model, Xt)
+        np.testing.assert_allclose(np.asarray(jitted),
+                                   np.asarray(model.predict(Xt)),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_sketched_krr_vmap_over_models():
+    """vmap over a stacked batch of fitted models (shared treedef)."""
+    X, y, _ = _toy(n=160)
+    kern = get_kernel("gaussian", bandwidth=0.75)
+    sk = make_accum_sketch(KEY, 160, 10, 2)
+    m1 = krr_sketched_fit(kern(X, X), y, 1e-3, sk, X, kern)
+    m2 = krr_sketched_fit(kern(X, X), 2.0 * y, 1e-3, sk, X, kern)
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]), m1, m2)
+    Xt = X[:17] + 0.01
+    out = jax.vmap(lambda m: m.predict(Xt))(stacked)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(m1.predict(Xt)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(m2.predict(Xt)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sketched_krr_operator_models_share_treedef():
+    """Two models fitted through EQUAL (but distinct) operators must carry
+    equal treedefs: ``kernel_fn`` rides in pytree aux and compares by
+    identity, so ``get_kernel`` must hand back the cached callable — a fresh
+    partial per fit made operator-path models un-stackable."""
+    from repro.core.kernel_op import KernelOperator
+
+    X, y, _ = _toy(n=160)
+    sk = make_accum_sketch(KEY, 160, 10, 2)
+    m1 = krr_sketched_fit(KernelOperator(X, "gaussian", bandwidth=0.75),
+                          y, 1e-3, sk)
+    m2 = krr_sketched_fit(KernelOperator(X, "gaussian", bandwidth=0.75),
+                          2.0 * y, 1e-3, sk)
+    assert jax.tree_util.tree_structure(m1) == jax.tree_util.tree_structure(m2)
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]), m1, m2)
+    Xt = X[:17] + 0.01
+    out = jax.vmap(lambda m: m.predict(Xt))(stacked)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(m2.predict(Xt)),
+                               rtol=1e-5, atol=1e-5)

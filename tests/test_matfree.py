@@ -167,6 +167,38 @@ def test_matfree_path_has_no_nxn_intermediate():
     assert dn >= n * n       # positive control: the detector sees the n² buffer
 
 
+def test_auto_chunk_respects_slab_budget_at_large_md():
+    """Regression for the ``max(256, …)`` floor in ``_auto_chunk``: at large
+    m·d a 256-row floor made the (chunk, m·d) streaming slab 64 MiB (the exact
+    failure ``matvec``'s chunk comment warns about).  The budget is ~16 MiB =
+    4M f32 elements; the traced program must never bind a bigger buffer."""
+    n, p, d, m = 8192, 4, 128, 512                 # m·d = 65536
+    budget_elems = 4 * 1024 * 1024
+    X = jax.random.uniform(KEY, (n, p))
+    sk = make_accum_sketch(KEY, n, d, m)
+    op = KernelOperator(X, "gaussian", bandwidth=0.6)
+    assert op._auto_chunk(m * d) * m * d <= budget_elems
+
+    jaxpr = jax.make_jaxpr(
+        lambda X: KernelOperator(X, "gaussian", bandwidth=0.6).sketch_cols(
+            sk, use_kernel=False))(X)
+    peak = _max_intermediate_elems(jaxpr.jaxpr)
+    # the old floor binds a 256·65536 ≈ 16.8M-element slab here
+    assert peak <= budget_elems + n * p, peak
+
+    # and the gate must key on SLAB size, not row count: at n = 4096 the old
+    # `rows > 4096` gate skipped chunking entirely and bound the full
+    # (4096, 65536) ≈ 1 GiB slab in one block
+    n_small = 4096
+    Xs = jax.random.uniform(KEY, (n_small, p))
+    sks = make_accum_sketch(KEY, n_small, d, m)
+    jaxpr_s = jax.make_jaxpr(
+        lambda X: KernelOperator(X, "gaussian", bandwidth=0.6).sketch_cols(
+            sks, use_kernel=False))(Xs)
+    peak_s = _max_intermediate_elems(jaxpr_s.jaxpr)
+    assert peak_s <= budget_elems + n_small * p, peak_s
+
+
 def test_engine_step_matfree_no_nxn_intermediate():
     """The progressive engine's slab increment on an operator is O(n·d) too."""
     n, d = 2048, 16

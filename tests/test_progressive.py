@@ -236,3 +236,66 @@ def test_coef_is_cached_and_correct():
     sk2 = jax.tree_util.tree_unflatten(treedef, leaves)
     assert sk2.coef_ is not None
     np.testing.assert_allclose(np.asarray(sk2.coef), np.asarray(sk.coef))
+
+
+# --------------------------------------------------------------------------- #
+# jittable driver (traced info scalars + masked sketch)
+# --------------------------------------------------------------------------- #
+
+def test_grow_sketch_both_is_jittable():
+    """The one-call driver must trace: ``info``'s m/err come back as traced
+    scalars (the seed's int()/float() forced a host sync per call) and the
+    sketch degrades to the masked full-size form, which applies identically
+    to the eager truncation."""
+    n, d = 200, 12
+    K = _psd_kernel(n, seed=3)
+
+    sk_e, C_e, W_e, info_e = A.grow_sketch_both(KEY, K, d, m_max=8, tol=0.15,
+                                                use_kernel=False)
+
+    @jax.jit
+    def driver(key, K):
+        sk, C, W, info = A.grow_sketch_both(key, K, d, m_max=8, tol=0.15,
+                                            use_kernel=False)
+        # applying the masked sketch INSIDE the trace must work too
+        C2 = A.sketch_right(K, sk)
+        return sk, C, W, info, C2
+
+    sk_j, C_j, W_j, info_j, C2 = driver(KEY, K)
+    assert int(info_j["m"]) == int(info_e["m"])
+    np.testing.assert_allclose(float(info_j["err"]), float(info_e["err"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(C_j), np.asarray(C_e),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(W_j), np.asarray(W_e),
+                               rtol=1e-5, atol=1e-6)
+    # masked sketch ≡ truncated sketch under every bilinear application
+    assert sk_j.m == 8 and sk_e.m == int(info_e["m"])   # static vs truncated
+    np.testing.assert_allclose(np.asarray(C2), np.asarray(A.sketch_right(K, sk_e)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sk_j.dense()),
+                               np.asarray(sk_e.dense()), rtol=1e-5, atol=1e-6)
+
+
+def test_adaptive_krr_driver_jits_end_to_end():
+    """The adaptive KRR caller can stay inside jit: fit + predict traced."""
+    from repro.core.krr import krr_sketched_fit_adaptive
+
+    n, d = 200, 12
+    X = jax.random.uniform(jax.random.fold_in(KEY, 9), (n, 3))
+    K = gaussian_kernel(X, X, bandwidth=0.6)
+    y = jnp.sin(3.0 * X[:, 0])
+
+    eager = krr_sketched_fit_adaptive(K, y, 1e-2, KEY, d, tol=0.1, m_max=8,
+                                      use_kernel=False)
+
+    @jax.jit
+    def fit(K, y):
+        mdl = krr_sketched_fit_adaptive(K, y, 1e-2, KEY, d, tol=0.1, m_max=8,
+                                        use_kernel=False)
+        return mdl.fitted, mdl.info["m"], mdl.info["err"]
+
+    fitted, m, err = fit(K, y)
+    assert int(m) == int(eager.info["m"])
+    np.testing.assert_allclose(np.asarray(fitted), np.asarray(eager.fitted),
+                               rtol=1e-4, atol=1e-5)
