@@ -14,10 +14,10 @@ def main():
     # structured (shared low-rank factor) matrices — the regime the paper's
     # kernel applications live in; i.i.d.-noise AᵀB has no signal to preserve
     U = jax.random.normal(key, (n, 8)) / 8**0.5
-    A = U @ jax.random.normal(jax.random.fold_in(key, 2), (8, p)) \
-        + 0.1 * jax.random.normal(jax.random.fold_in(key, 3), (n, p))
-    B = U @ jax.random.normal(jax.random.fold_in(key, 4), (8, q)) \
-        + 0.1 * jax.random.normal(jax.random.fold_in(key, 5), (n, q))
+    A = (U @ jax.random.normal(jax.random.fold_in(key, 2), (8, p))
+         + 0.1 * jax.random.normal(jax.random.fold_in(key, 3), (n, p)))
+    B = (U @ jax.random.normal(jax.random.fold_in(key, 4), (8, q))
+         + 0.1 * jax.random.normal(jax.random.fold_in(key, 5), (n, q)))
     t_exact = timeit(jax.jit(lambda a, b: a.T @ b), A, B)
     for d, m in [(256, 1), (256, 4), (1024, 1), (1024, 4)]:
         sk = make_accum_sketch(jax.random.fold_in(key, d + m), n, d, m)

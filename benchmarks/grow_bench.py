@@ -1,0 +1,179 @@
+"""Batched vs sequential growth: the engine's cost model, measured.
+
+Times the two ways of growing a sketch m → m+B:
+
+  * SEQUENTIAL — B ``accum_step`` launches, each a full sweep over K (the
+    Pallas gather→GEMM path reads every K tile per step) or a full
+    kernel-evaluation pass over X on the matrix-free path;
+  * BATCHED — ONE ``accum_grow_batched`` pass folding all B slabs, with the
+    survivor rescales telescoped into the tile writes and both d×d W pieces
+    gathered from the same sweep.
+
+Also times the doubling-schedule growth 1 → m_max on the matrix-free path
+(O(log m) passes vs m passes — the pass counts land in the JSON next to the
+wall times) and the measured autotune cache cold (first call measures the
+candidate tilings) vs warm (persisted winner served from the JSON cache).
+
+Run:   PYTHONPATH=src python -m benchmarks.run grow
+Smoke: PYTHONPATH=src python -m benchmarks.run grow --smoke
+       (tiny shapes, 1 rep — CI's configuration; JSON tagged "smoke": true)
+
+Writes ``BENCH_grow.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+
+import jax
+
+from benchmarks.common import bimodal_data, emit, timeit
+from repro.core import apply as A
+from repro.core.kernel_op import KernelOperator
+from repro.core.sketch import make_accum_sketch
+from repro.kernels.accum_apply import autotune
+from repro.kernels.accum_apply.ops import default_interpret, sketch_right_kernel
+from repro.util import env_flag
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_grow.json"
+
+# The acceptance anchor: dense Pallas path at n=4096, d=64, B=8 (each
+# sequential step re-reads all of K; the batch reads it once).  The matfree
+# sweep grows 1 → m_max at n up to 131072, where a dense K cannot exist.
+FULL = dict(n_dense=4096, d=64, B=8, m_max=32, ns_matfree=[4096, 131072],
+            bandwidth=0.75)
+SMOKE = dict(n_dense=256, d=16, B=4, m_max=8, ns_matfree=[256, 1024],
+             bandwidth=0.75)
+
+
+def bench_config() -> tuple[dict, int]:
+    if env_flag("REPRO_BENCH_SMOKE", False):
+        return SMOKE, 1
+    return FULL, 2
+
+
+def bench_dense_anchor(results: dict, cfg: dict, reps: int) -> None:
+    """B sequential Pallas step launches vs one batched launch on dense K."""
+    key = jax.random.PRNGKey(0)
+    n, d, B = cfg["n_dense"], cfg["d"], cfg["B"]
+    K = jax.random.normal(key, (n, n))
+    K = 0.5 * (K + K.T)
+    state = A.accum_init(key, n, d, B)
+
+    def seq(K, s):
+        for _ in range(B):
+            s = A.accum_step(K, s, use_kernel=True)
+        return s.C, s.W
+
+    def bat(K, s):
+        s = A.accum_grow_batched(K, s, B, use_kernel=True)
+        return s.C, s.W
+
+    t_seq = timeit(jax.jit(seq), K, state, reps=reps)
+    t_bat = timeit(jax.jit(bat), K, state, reps=reps)
+    speedup = t_seq / max(t_bat, 1e-9)
+    tag = f"n{n}_d{d}_B{B}_f32"
+    emit(f"grow_sequential_{tag}", t_seq * 1e6,
+         f"{B} accum_step launches ({B} reads of K)")
+    emit(f"grow_batched_{tag}", t_bat * 1e6,
+         f"one accum_grow pass; seq/batched={speedup:.1f}x")
+    results[f"grow_sequential_{tag}"] = {"us": t_seq * 1e6, "passes": B}
+    results[f"grow_batched_{tag}"] = {
+        "us": t_bat * 1e6, "passes": 1, "speedup_vs_sequential": speedup}
+
+
+def bench_matfree_growth(results: dict, cfg: dict, reps: int) -> None:
+    """Growing 1 → m_max matrix-free: m_max unit passes vs the doubling
+    ladder's O(log m) passes — same kernel-eval count, one X sweep per batch
+    instead of per slab."""
+    key = jax.random.PRNGKey(1)
+    d, m_max = cfg["d"], cfg["m_max"]
+    schedule = A.doubling_schedule(0, m_max)
+    for n in cfg["ns_matfree"]:
+        X, _, _ = bimodal_data(jax.random.fold_in(key, n), n)
+        op = KernelOperator(X, "gaussian", bandwidth=cfg["bandwidth"])
+        this_reps = 1 if n >= 65536 else reps
+
+        def seq(X_, s, op=op):
+            return A.accum_grow(KernelOperator(X_, op.kernel, op.bandwidth),
+                                s, m_max, use_kernel=False).C
+
+        def bat(X_, s, op=op):
+            o = KernelOperator(X_, op.kernel, op.bandwidth)
+            for b in schedule:
+                s = A.accum_grow_batched(o, s, b, use_kernel=False)
+            return s.C
+
+        state = A.accum_init(key, n, d, m_max)
+        t_seq = timeit(jax.jit(seq), X, state, reps=this_reps)
+        t_bat = timeit(jax.jit(bat), X, state, reps=this_reps)
+        speedup = t_seq / max(t_bat, 1e-9)
+        tag = f"n{n}_d{d}_m{m_max}"
+        emit(f"grow_matfree_sequential_{tag}", t_seq * 1e6,
+             f"{m_max} kernel-eval passes over X")
+        emit(f"grow_matfree_doubling_{tag}", t_bat * 1e6,
+             f"{len(schedule)} passes (O(log m)); seq/batched={speedup:.1f}x")
+        results[f"grow_matfree_sequential_{tag}"] = {
+            "us": t_seq * 1e6, "passes": m_max}
+        results[f"grow_matfree_doubling_{tag}"] = {
+            "us": t_bat * 1e6, "passes": len(schedule),
+            "speedup_vs_sequential": speedup}
+
+
+def bench_autotune_cold_warm(results: dict, cfg: dict, reps: int) -> None:
+    """First call at a key measures the candidate tilings (cold); every later
+    call is a cache hit (warm).  Uses a throwaway cache file so the run never
+    touches — or depends on — the user's persisted cache."""
+    key = jax.random.PRNGKey(2)
+    n, d = cfg["n_dense"], cfg["d"]
+    K = jax.random.normal(key, (n, n))
+    sk = make_accum_sketch(key, n, d, max(cfg["B"] // 2, 1))
+    saved = {k: os.environ.get(k) for k in (autotune.ENV_CACHE, autotune.ENV_GATE)}
+    with tempfile.TemporaryDirectory() as tmp:
+        os.environ[autotune.ENV_CACHE] = str(pathlib.Path(tmp) / "autotune.json")
+        os.environ[autotune.ENV_GATE] = "1"
+        try:
+            t_cold = timeit(lambda: sketch_right_kernel(K, sk), reps=1,
+                            warmup=0)
+            t_warm = timeit(lambda: sketch_right_kernel(K, sk), reps=reps)
+            blocks = autotune.lookup("accum_apply", (n, n, d, sk.m), K.dtype,
+                                     default_interpret())
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+    emit("autotune_cold", t_cold * 1e6,
+         f"first call: measures candidates, persists winner {blocks}")
+    emit("autotune_warm", t_warm * 1e6,
+         f"cache hit; cold/warm={t_cold / max(t_warm, 1e-9):.1f}x")
+    results["autotune_cold"] = {"us": t_cold * 1e6, "winner": list(blocks or ())}
+    results["autotune_warm"] = {"us": t_warm * 1e6}
+
+
+def main() -> None:
+    cfg, reps = bench_config()
+    results: dict = {}
+    bench_dense_anchor(results, cfg, reps)
+    bench_matfree_growth(results, cfg, reps)
+    bench_autotune_cold_warm(results, cfg, reps)
+    payload = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+        },
+        "config": cfg,
+        "smoke": env_flag("REPRO_BENCH_SMOKE", False),
+        "results": results,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("bench_json", 0.0, f"wrote {BENCH_PATH.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,20 @@
 """Benchmark harness: one module per paper table/figure + system benches.
 Prints ``name,us_per_call,derived`` CSV rows. Suites that track a perf
-trajectory (``kernels``, ``matfree``, ``distributed``) also write a
+trajectory (``kernels``, ``matfree``, ``grow``, ``distributed``) also write a
 BENCH_*.json at the repo root — old-vs-new kernel and structural-vs-dense
 timings live in ``BENCH_kernels.json``; the matrix-free operator's
 past-the-n²-wall numbers (KRR at n = 131072, dense refused) live in
-``BENCH_matfree.json``; the sharded weak/strong scaling table (per-device C
-∝ 1/D) lives in ``BENCH_distributed.json`` (run that suite under
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+``BENCH_matfree.json``; batched-vs-sequential growth and the autotune
+cold/warm timings live in ``BENCH_grow.json``; the sharded weak/strong
+scaling table (per-device C ∝ 1/D) lives in ``BENCH_distributed.json`` (run
+that suite under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
   PYTHONPATH=src python -m benchmarks.run kernels    # refresh BENCH_kernels.json
-  PYTHONPATH=src python -m benchmarks.run matfree    # refresh BENCH_matfree.json
+  PYTHONPATH=src python -m benchmarks.run grow       # refresh BENCH_grow.json
 
-``--smoke`` runs suites that honor it (``kernels``, ``matfree``,
+``--smoke`` runs suites that honor it (``kernels``, ``matfree``, ``grow``,
 ``distributed``) at tiny
 shapes with a single rep — CI uses it to regenerate the JSONs on every PR
 without timing out; they are tagged ``"smoke": true`` so real trajectory
@@ -26,8 +27,8 @@ import sys
 import traceback
 
 from benchmarks import amm_bench, distributed_bench, falkon_bench, fig1_toy
-from benchmarks import fig2_approx_error, fig3_tradeoff, kernel_bench
-from benchmarks import matfree_bench, roofline, train_bench
+from benchmarks import fig2_approx_error, fig3_tradeoff, grow_bench
+from benchmarks import kernel_bench, matfree_bench, roofline, train_bench
 
 SUITES = {
     "fig1": fig1_toy.main,          # paper Fig. 1 (toy tradeoff)
@@ -37,6 +38,7 @@ SUITES = {
     "amm": amm_bench.main,          # paper §5 extension
     "kernels": kernel_bench.main,   # Pallas kernels + O(nmd) claim
     "matfree": matfree_bench.main,  # matrix-free operator: past the n² wall
+    "grow": grow_bench.main,        # batched rank-B growth + autotune cache
     "distributed": distributed_bench.main,  # sharded (C, W): weak/strong scaling
     "train": train_bench.main,      # end-to-end step throughput
     "roofline": roofline.main,      # dry-run roofline table

@@ -42,11 +42,14 @@ for name, sk in {
 
 print("→ accumulation (medium m) ≈ Gaussian-sketch accuracy at Nyström cost.")
 
-# ---- adaptive accumulation ------------------------------------------------ #
-# The progressive engine rescues a cheap sampling scheme by GROWING m: each
-# step folds one new sub-sampling matrix into the running (C, W) with a rank-d
-# O(n·d) incremental update, until a plug-in holdout estimate of the sketched-
-# operator error clears the target. Callers specify a tolerance, not m.
+# ---- adaptive accumulation (batched, doubling schedule) -------------------- #
+# The progressive engine rescues a cheap sampling scheme by GROWING m.  Since
+# PR 5 it grows in BATCHES on a doubling schedule: draw B new sub-sampling
+# matrices, fold all B into the running (C, W) with ONE pass over the data
+# (the survivor rescales telescope into a single scalar), check the plug-in
+# holdout estimate, B ← 2B — O(log m) data passes where the unit schedule
+# paid one pass per slab (info["passes"] counts them; schedule="unit" brings
+# the old loop back).  Callers still specify a tolerance, not m.
 # (Sharper kernel + smaller d than above, so the error target actually bites.)
 kern_hard = get_kernel("gaussian", bandwidth=0.4)
 K = kern_hard(X, X)  # adaptive path works on a precomputed K (engine gathers cols)
@@ -58,7 +61,12 @@ for tol in [0.2, 0.05, 0.02]:
     # info's m/err are jax scalars (the driver stays jittable) — convert at
     # the printing edge only
     print(f"  tol={tol:5.2f} → engine chose m={int(model.info['m']):2d} "
+          f"in {int(model.info['passes'])} data passes "
           f"(est err {float(model.info['err']):.3f}), ‖f̂_S − f̂_n‖²_n = {float(err):.3e}")
+# Kernel block sizes come from a measured autotune cache: the first eager
+# call at a new (shape, dtype, backend) key times candidate tilings and
+# persists the winner to REPRO_AUTOTUNE_CACHE (default
+# ~/.cache/repro/autotune.json); REPRO_AUTOTUNE=0/1 gates the measuring.
 
 # ---- matrix-free: sketch the DATASET, not a matrix ------------------------- #
 # KernelOperator = data + kernel name. C = K S and W = SᵀKS stream from X in
@@ -69,8 +77,8 @@ for tol in [0.2, 0.05, 0.02]:
 n_big = 50_000
 kb = jax.random.fold_in(key, 2)
 X_big = jax.random.uniform(kb, (n_big, 3))
-y_big = jnp.sin(3 * X_big[:, 0]) + X_big[:, 1] ** 2 - X_big[:, 2] \
-    + 0.3 * jax.random.normal(jax.random.fold_in(kb, 1), (n_big,))
+y_big = (jnp.sin(3 * X_big[:, 0]) + X_big[:, 1] ** 2 - X_big[:, 2]
+         + 0.3 * jax.random.normal(jax.random.fold_in(kb, 1), (n_big,)))
 op = KernelOperator(X_big, "gaussian", bandwidth=0.5)
 sk_big = make_accum_sketch(kb, n_big, 64, m=4)
 model = krr_sketched_fit(op, y_big, lam, sk_big)      # dataset in — no K

@@ -12,8 +12,11 @@ from repro.core.sketch import (
 from repro.core.apply import (
     accum_grow,
     accum_grow_adaptive,
+    accum_grow_batched,
+    accum_grow_doubling,
     accum_init,
     accum_step,
+    doubling_schedule,
     gram_sketch,
     grow_sketch_both,
     make_holdout_estimator,
@@ -26,7 +29,7 @@ from repro.core.apply import (
     unsketch_mat,
     unsketch_vec,
 )
-from repro.core.kernel_op import KernelOperator, stream_cols
+from repro.core.kernel_op import KernelOperator, stream_cols, stream_cols_slabs
 from repro.core.distributed import (
     make_data_mesh,
     shard_rows,

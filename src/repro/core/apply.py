@@ -26,6 +26,7 @@ by growing m until a plug-in error estimate clears the caller's tolerance.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -203,13 +204,64 @@ def slab_w_update(state: AccumState, TtC: jax.Array, Ksub: jax.Array,
     return 0.5 * (W_new + W_new.T)
 
 
-def finish_grow(state: AccumState, m_max: int):
+def batch_pieces(state: AccumState, B: int):
+    """(idx_blk, coef_blk, a) for folding slabs [t, t+B) in ONE batch: the
+    B-row index/coefficient block normalized directly for the GROWN size
+    t+B (coef = r / sqrt(d (t+B) p)) and the telescoped survivor rescale
+    a = sqrt(t/(t+B)) — the per-step sqrt(k/(k+1)) rescales of B sequential
+    ``slab_pieces`` steps collapse into exactly these two factors, which is
+    what makes the batch one pass instead of B.
+
+    Shared by the dense and sharded engines (same reason as ``slab_pieces``).
+    ``B`` must be static; the caller guarantees t + B ≤ m_max (the slice
+    would clamp and silently re-read earlier slabs otherwise)."""
+    t = state.m
+    tf = t.astype(jnp.float32)
+    d = state.d
+    idx_blk = jax.lax.dynamic_slice_in_dim(state.indices, t, B, axis=0)
+    sgn_blk = jax.lax.dynamic_slice_in_dim(state.signs, t, B, axis=0)
+    p_blk = jnp.take(state.probs, idx_blk).astype(jnp.float32)
+    coef_blk = sgn_blk.astype(jnp.float32) / jnp.sqrt(d * (tf + B) * p_blk)
+    a = jnp.sqrt(tf / (tf + B))
+    return idx_blk, coef_blk, a
+
+
+def block_left(idx_blk: jax.Array, coef_blk: jax.Array, M: jax.Array) -> jax.Array:
+    """Tᵀ M (d, c) for the batch block T described by idx/coef (B, d): a
+    B·d-row gather of M contracted with the coefficients — the d×d W pieces
+    of the batched update (TᵀC from the running C, TᵀKT = Tᵀ(KT) from the
+    same G the C update produced; no second pass over anything n-sized)."""
+    B, d = idx_blk.shape
+    rows = jnp.take(M, idx_blk.reshape(-1), axis=0).reshape(B, d, M.shape[-1])
+    return jnp.einsum("bdc,bd->dc", rows.astype(jnp.float32), coef_blk)
+
+
+def batch_w_update(state: AccumState, TtC: jax.Array, TtG: jax.Array,
+                   a: jax.Array) -> jax.Array:
+    """The batched W recurrence: W_{t+B} = a²·W_t + a·(TᵀC + (TᵀC)ᵀ) + TᵀKT,
+    exact-arithmetic symmetrized.  Shared by the dense and sharded engines."""
+    W_new = (a * a) * state.W + a * (TtC + TtC.T) + TtG
+    return 0.5 * (W_new + W_new.T)
+
+
+def finish_grow(state: AccumState, m_max: int, passes: jax.Array | None = None):
     """The grow drivers' shared return contract: (sketch, C, W, info) with
-    jax-scalar info and the trace-safe masked sketch under a tracer."""
-    info = {"m": state.m, "m_max": m_max, "err": state.err}
+    jax-scalar info and the trace-safe masked sketch under a tracer.
+    ``passes`` is the number of data sweeps the growth took (== m on the
+    unit schedule, O(log m) on the doubling schedule)."""
+    info = {"m": state.m, "m_max": m_max, "err": state.err,
+            "passes": state.m if passes is None else passes}
     if isinstance(state.m, jax.core.Tracer):
         return state.masked_sketch(), state.C, state.W, info
     return state.sketch(), state.C, state.W, info
+
+
+def _concrete_args(*trees) -> bool:
+    """True iff no leaf is a tracer — the condition for routing through the
+    buffer-donating jitted wrappers (nested jit would silently drop the
+    donation and warn)."""
+    return not any(isinstance(leaf, jax.core.Tracer)
+                   for t in trees for leaf in jax.tree_util.tree_leaves(t))
 
 
 def accum_step(K: jax.Array, state: AccumState, *,
@@ -259,9 +311,29 @@ def accum_step(K: jax.Array, state: AccumState, *,
     return dataclasses.replace(state, C=C_new, W=W_new, m=t + 1)
 
 
+@functools.partial(jax.jit, static_argnames=("steps", "use_kernel"),
+                   donate_argnums=(1,))
+def _grow_loop_donated(K, state: AccumState, steps: int,
+                       use_kernel: bool) -> AccumState:
+    """The unconditional growth loop under jit with the state DONATED: the
+    incoming (C, W) buffers are reused for the outputs, so an eager grow call
+    keeps one n·d C resident instead of functionally rebuilding a second."""
+    def body(_, s):
+        return accum_step(K, s, use_kernel=use_kernel)
+
+    return jax.lax.fori_loop(0, steps, body, state)
+
+
 def accum_grow(K: jax.Array, state: AccumState, steps: int, *,
-               use_kernel: bool | None = None, mesh=None) -> AccumState:
-    """Unconditionally fold in ``steps`` more slabs (``lax.fori_loop``)."""
+               use_kernel: bool | None = None, mesh=None,
+               donate: bool = True) -> AccumState:
+    """Unconditionally fold in ``steps`` more slabs (``lax.fori_loop``).
+
+    Eager calls route through a jitted wrapper that DONATES the state — the
+    caller's ``state`` buffers are consumed (its C/W must not be reused
+    afterwards; pass ``donate=False`` to keep them, e.g. when timing repeated
+    calls on the same state).  Traced calls inline (nested donation would be
+    dropped silently)."""
     if mesh is not None:
         from repro.core import distributed as D
 
@@ -269,11 +341,105 @@ def accum_grow(K: jax.Array, state: AccumState, steps: int, *,
                                     use_kernel=use_kernel)
     if use_kernel is None:
         use_kernel = default_use_kernel()
+    if donate and _concrete_args(K, state):
+        return _grow_loop_donated(K, state, steps, use_kernel)
 
     def body(_, s):
         return accum_step(K, s, use_kernel=use_kernel)
 
     return jax.lax.fori_loop(0, steps, body, state)
+
+
+def _accum_grow_batched_impl(K, state: AccumState, B: int,
+                             use_kernel: bool) -> AccumState:
+    op = _operator(K)
+    idx_blk, coef_blk, a = batch_pieces(state, B)
+    if op is not None:
+        # ONE kernel-evaluation sweep for all B slabs: the fused Pallas
+        # kernel-eval→GEMM kernel takes the (B, d) block whole (the MXU wants
+        # the wide GEMM); the streaming path accumulates slab-by-slab at the
+        # narrow GEMM shape (``stream_cols_slabs`` — XLA's wide-output CPU
+        # tiling degrades ~2× by B·d ≈ 1024).  TᵀKT reuses G, no extra evals
+        if use_kernel:
+            G = op.weighted_cols(op.X, idx_blk, coef_blk,
+                                 use_kernel=True).astype(jnp.float32)
+        else:
+            from repro.core.kernel_op import stream_cols_slabs
+
+            lm = jnp.take(op.X, idx_blk.reshape(-1), axis=0)
+            G = stream_cols_slabs(op.X, lm, coef_blk,
+                                  op.kernel_fn).astype(jnp.float32)
+        C_new = a * state.C + G
+        TtG = block_left(idx_blk, coef_blk, G)
+        TtC = block_left(idx_blk, coef_blk, state.C)
+    elif use_kernel:
+        from repro.kernels.accum_apply.ops import accum_grow_kernel
+        C_new, TtG, TtC = accum_grow_kernel(K, idx_blk, coef_blk, state.C, a)
+    else:
+        n = K.shape[0]
+        cols = jnp.take(K, idx_blk.reshape(-1), axis=1).astype(jnp.float32)
+        G = jnp.einsum("nbd,bd->nd", cols.reshape(n, B, state.d), coef_blk)
+        C_new = a * state.C + G
+        TtG = block_left(idx_blk, coef_blk, G)
+        TtC = block_left(idx_blk, coef_blk, state.C)
+    W_new = batch_w_update(state, TtC, TtG, a)
+    return dataclasses.replace(state, C=C_new, W=W_new, m=state.m + B)
+
+
+@functools.partial(jax.jit, static_argnames=("B", "use_kernel"),
+                   donate_argnums=(1,))
+def _grow_batched_donated(K, state: AccumState, B: int,
+                          use_kernel: bool) -> AccumState:
+    return _accum_grow_batched_impl(K, state, B, use_kernel)
+
+
+def accum_grow_batched(K: jax.Array, state: AccumState, B: int, *,
+                       use_kernel: bool | None = None, mesh=None,
+                       donate: bool = True) -> AccumState:
+    """Fold the next ``B`` pre-drawn slabs into (C, W) in ONE pass over the
+    data — the batched rank-B counterpart of ``accum_step``.
+
+    The per-step survivor rescales telescope (``batch_pieces``), so the whole
+    batch is: one column-block application G = K·T (a single fused Pallas
+    launch / kernel-eval sweep / gather, read of K or X exactly once), the
+    C update a·C + G, and two d×d gathers for W — bitwise-identical in draws
+    to B sequential ``accum_step`` calls (same pre-drawn indices/signs) and
+    ≤ 1e-5-rel-equivalent in (C, W) values (summation order only).
+
+    Eager calls donate the state buffers as in ``accum_grow``
+    (``donate=False`` opts out).  ``B`` must be static, with
+    state.m + B ≤ m_max."""
+    # validate BEFORE the mesh dispatch: an overrun would make batch_pieces'
+    # dynamic_slice clamp and silently re-fold earlier slabs on either path
+    if not 1 <= B <= state.m_max:
+        raise ValueError(f"batch size B={B} outside [1, m_max={state.m_max}]")
+    if not isinstance(state.m, jax.core.Tracer) and int(state.m) + B > state.m_max:
+        raise ValueError(
+            f"batch of {B} slabs from m={int(state.m)} overruns the "
+            f"pre-drawn m_max={state.m_max}")
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_accum_grow_batched(K, state, B, mesh,
+                                            use_kernel=use_kernel)
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if donate and _concrete_args(K, state):
+        return _grow_batched_donated(K, state, B, use_kernel)
+    return _accum_grow_batched_impl(K, state, B, use_kernel)
+
+
+def doubling_schedule(m_start: int, m_max: int) -> list[int]:
+    """Static batch sizes 1, 2, 4, … (clamped into the remaining budget) that
+    grow ``m_start`` → ``m_max``: O(log m_max) batches, each ONE data pass,
+    instead of m_max unit steps."""
+    out, t, B = [], m_start, 1
+    while t < m_max:
+        b = min(B, m_max - t)
+        out.append(b)
+        t += b
+        B *= 2
+    return out
 
 
 def make_holdout_estimator(key: jax.Array, K: jax.Array, num: int = 64,
@@ -340,15 +506,85 @@ def make_hutchinson_estimator(key: jax.Array, K: jax.Array, num_probes: int = 8,
     return estimate
 
 
+def doubling_ladder(state: AccumState, m_max: int, tol: float, apply_batch,
+                    estimator) -> tuple[AccumState, jax.Array]:
+    """The shared doubling-schedule driver: static batch ladder, one
+    ``lax.cond`` phase guard per batch (only the taken branch executes), the
+    estimator once per batch.  ``apply_batch(state, B)`` is the backend —
+    the dense/matfree ``accum_grow_batched`` or the sharded mapped sweep —
+    so the stopping decisions cannot drift between engines.  Returns
+    ``(state, passes)``.
+
+    The schedule is laid out from the state's current m (assumed 0 under a
+    tracer — the grow drivers always pass a fresh state); the per-phase
+    guard ``m + B ≤ m_max`` makes overrunning the pre-drawn slabs impossible
+    either way."""
+    m0 = 0 if isinstance(state.m, jax.core.Tracer) else int(state.m)
+    carry = (state, jnp.zeros((), jnp.int32))
+    for B in doubling_schedule(m0, m_max):
+        def do_batch(sp, B=B):
+            s, p = sp
+            s = apply_batch(s, B)
+            return dataclasses.replace(s, err=estimator(s)), p + 1
+
+        s, _ = carry
+        pred = jnp.logical_and(s.err > tol, s.m + B <= m_max)
+        carry = jax.lax.cond(pred, do_batch, lambda sp: sp, carry)
+    return carry
+
+
+def accum_grow_doubling(K: jax.Array, state: AccumState, *, tol: float,
+                        estimator, use_kernel: bool | None = None,
+                        mesh=None) -> tuple[AccumState, jax.Array]:
+    """Adaptive growth on the DOUBLING schedule: draw B slabs, fold them in
+    with ONE data pass (``accum_grow_batched``), check the estimator, B ← 2B
+    — O(log m_final) passes over K (or X) instead of O(m_final).
+
+    The batch sizes are static (1, 2, 4, …, clamped to m_max — the shared
+    ``doubling_ladder``), so the whole driver stays jittable: each phase is
+    a ``lax.cond`` that either applies the batch or passes the state through
+    untouched once the tolerance is met — only the taken branch executes, so
+    a converged state pays nothing for the remaining phases.  The estimator
+    runs once per BATCH (its probe/holdout contractions read the C the same
+    pass just produced), not once per slab.  Returns ``(state, passes)``
+    with ``passes`` the number of batches actually applied."""
+    if mesh is not None:
+        from repro.core import distributed as D
+
+        return D.sharded_accum_grow_doubling(
+            K, state, mesh, tol=tol, estimator=estimator,
+            use_kernel=use_kernel)
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+
+    def apply_batch(s, B):
+        return accum_grow_batched(K, s, B, use_kernel=use_kernel,
+                                  donate=False)
+
+    return doubling_ladder(state, state.m_max, tol, apply_batch, estimator)
+
+
 def accum_grow_adaptive(K: jax.Array, state: AccumState, *, tol: float,
                         estimator, check_every: int = 1,
                         use_kernel: bool | None = None,
-                        mesh=None) -> AccumState:
+                        mesh=None, schedule: str = "unit") -> AccumState:
     """Grow until ``estimator(state) ≤ tol`` or the pre-drawn ``m_max`` slabs
-    are exhausted (``lax.while_loop``).  ``estimator`` maps AccumState → scalar
-    error; ``check_every > 1`` amortizes its cost over several growth steps.
-    With ``mesh`` pass a shard-aware estimator (``make_*_estimator(mesh=…)``)
-    — the loop states carry C padded up to the mesh."""
+    are exhausted.  ``estimator`` maps AccumState → scalar error.
+
+    ``schedule="unit"`` (default here; the ``grow_sketch_both`` driver
+    defaults to doubling) folds one slab per pass in a ``lax.while_loop``;
+    ``check_every > 1`` amortizes the estimator over several growth steps.
+    ``schedule="doubling"`` delegates to ``accum_grow_doubling`` — batched
+    rank-B passes, O(log m) sweeps over the data, estimator once per batch
+    (``check_every`` does not apply there).  With ``mesh`` pass a shard-aware
+    estimator (``make_*_estimator(mesh=…)``) — the loop states carry C padded
+    up to the mesh."""
+    if schedule not in ("unit", "doubling"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if schedule == "doubling":
+        state, _ = accum_grow_doubling(K, state, tol=tol, estimator=estimator,
+                                       use_kernel=use_kernel, mesh=mesh)
+        return state
     if mesh is not None:
         from repro.core import distributed as D
 
@@ -375,7 +611,7 @@ def grow_sketch_both(
     key: jax.Array, K: jax.Array, d: int, *, m_max: int = 32,
     tol: float | None = None, probs: jax.Array | None = None,
     signed: bool = True, estimator=None, check_every: int = 1,
-    use_kernel: bool | None = None, mesh=None,
+    use_kernel: bool | None = None, mesh=None, schedule: str = "doubling",
 ) -> tuple[AccumSketch, jax.Array, jax.Array, dict]:
     """One-call driver: grow a sketch on K — a precomputed matrix OR a
     matrix-free ``KernelOperator`` — until the error target is met (or to
@@ -395,6 +631,12 @@ def grow_sketch_both(
     static (m_max, d) shapes, zero-coefficient slabs beyond m, applies
     identically to the truncation eager callers get.
 
+    Adaptive growth defaults to ``schedule="doubling"``: batched rank-B
+    passes (draw B, one sweep, check the estimator, B ← 2B), O(log m) data
+    passes instead of O(m) — ``info["passes"]`` reports the count.  Pass
+    ``schedule="unit"`` for the one-slab-per-pass while_loop (there
+    ``check_every`` amortizes the estimator).
+
     ``mesh`` (operator only) runs the whole growth data-parallel: identical
     index/holdout/probe draws (the RNG happens replicated, before anything is
     sharded), per-shard slab kernel evals, psum reductions."""
@@ -404,18 +646,28 @@ def grow_sketch_both(
         return D.sharded_grow_sketch_both(
             key, K, d, mesh, m_max=m_max, tol=tol, probs=probs, signed=signed,
             estimator=estimator, check_every=check_every,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, schedule=schedule)
     n = K.shape[0]
     state = accum_init(key, n, d, m_max, probs, signed=signed)
+    passes = None
     if tol is None:
-        state = accum_grow(K, state, m_max, use_kernel=use_kernel)
+        # fixed-size growth is ONE batch: t=0 makes the survivor rescale 0
+        # and the m_max-slab block IS the one-shot sketch — a single data
+        # pass where the unit loop paid m_max
+        state = accum_grow_batched(K, state, m_max, use_kernel=use_kernel)
+        passes = jnp.ones((), jnp.int32)
     else:
         if estimator is None:
             estimator = make_holdout_estimator(jax.random.fold_in(key, 0x5E1D), K)
-        state = accum_grow_adaptive(K, state, tol=tol, estimator=estimator,
-                                    check_every=check_every,
-                                    use_kernel=use_kernel)
-    return finish_grow(state, m_max)
+        if schedule == "doubling":
+            state, passes = accum_grow_doubling(
+                K, state, tol=tol, estimator=estimator, use_kernel=use_kernel)
+        else:
+            state = accum_grow_adaptive(K, state, tol=tol, estimator=estimator,
+                                        check_every=check_every,
+                                        use_kernel=use_kernel,
+                                        schedule=schedule)
+    return finish_grow(state, m_max, passes=passes)
 
 
 def sketch_kernel_cols(

@@ -46,7 +46,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import apply as A
-from repro.core.kernel_op import KernelOperator, _scan_row_chunks, stream_cols
+from repro.core.kernel_op import (
+    KernelOperator,
+    _scan_row_chunks,
+    stream_cols,
+    stream_cols_slabs,
+)
 from repro.core.sketch import AccumSketch, AccumState
 
 DATA_AXIS = "data"
@@ -198,9 +203,13 @@ def sharded_sketch_left(sk: AccumSketch, M: jax.Array, mesh: Mesh) -> jax.Array:
 # sharded C = K(·)·S — per-device tiles through the existing backends
 # --------------------------------------------------------------------------- #
 
-def _tile_cols_fn(op: KernelOperator, use_kernel: bool, chunk: int | None):
+def _tile_cols_fn(op: KernelOperator, use_kernel: bool, chunk: int | None,
+                  *, slabwise: bool = False):
     """(X_tile, landmarks, coef) → C_tile through the backend the
-    single-device path would use (Pallas kernel-eval→GEMM or scanned jnp)."""
+    single-device path would use (Pallas kernel-eval→GEMM or scanned jnp).
+    ``slabwise`` routes multi-slab blocks through ``stream_cols_slabs`` —
+    the batched engine's narrow-GEMM accumulation — instead of the wide
+    slab (the Pallas path keeps the wide block either way)."""
     kf = op.kernel_fn
 
     def tile(xb, lm, coef):
@@ -208,6 +217,10 @@ def _tile_cols_fn(op: KernelOperator, use_kernel: bool, chunk: int | None):
             from repro.kernels.accum_apply.ops import matfree_cols_kernel
             return matfree_cols_kernel(xb, lm, coef, kernel=op.kernel,
                                        bandwidth=op.bandwidth, nu=op.nu)
+        if slabwise and coef.shape[0] > 1:
+            return stream_cols_slabs(xb, lm, coef, kf,
+                                     chunk=None if chunk is None
+                                     else min(chunk, xb.shape[0]))
         return stream_cols(xb, lm, coef, kf,
                            chunk=None if chunk is None
                            else min(chunk, xb.shape[0]))
@@ -382,6 +395,49 @@ def _sharded_step(opp: KernelOperator, state: AccumState, mesh: Mesh,
     return dataclasses.replace(state, C=C_new, W=W_new, m=t + 1)
 
 
+def _sharded_batched(opp: KernelOperator, state: AccumState, B: int,
+                     mesh: Mesh, use_kernel: bool, n_real: int) -> AccumState:
+    """One m → m+B batch on pre-padded (X, C): the same arithmetic as
+    ``apply.accum_grow_batched`` with the B-slab column block computed
+    per-shard in ONE mapped launch and BOTH d×d W-piece gathers (TᵀC from
+    the old C, TᵀG from the G the launch just produced) psum-reduced from
+    the same pass — the sharded engine reads each X shard once per batch.
+    Draws are the replicated pre-draw, so they stay bitwise-identical to the
+    single-device batched (and sequential) paths."""
+    D = _data_size(mesh)
+    rows = opp.n // D
+    idx_blk, coef_blk, a = A.batch_pieces(state, B)
+    d = state.d
+    lm = jnp.take(opp.X, idx_blk.reshape(-1), axis=0)
+    tile = _tile_cols_fn(opp, use_kernel, None, slabwise=True)
+
+    def body(xb, cb, lm_, cf, idx_flat, a_):
+        lo = jax.lax.axis_index(DATA_AXIS) * rows
+        g = tile(xb, lm_, cf).astype(jnp.float32)
+        live = (lo + jnp.arange(rows)) < n_real
+        g = jnp.where(live[:, None], g, 0.0)
+        c_new = a_ * cb + g
+        inside = (idx_flat >= lo) & (idx_flat < lo + rows)
+        local = jnp.where(inside, idx_flat - lo, 0)
+        mask = inside[:, None].astype(jnp.float32)
+        grows = jnp.take(g, local, axis=0) * mask
+        crows = jnp.take(cb, local, axis=0) * mask
+        return (c_new, jax.lax.psum(grows, DATA_AXIS),
+                jax.lax.psum(crows, DATA_AXIS))
+
+    C_new, Grows, Crows = _shard_map()(
+        body, mesh=mesh,
+        in_specs=(P(DATA_AXIS, None), P(DATA_AXIS, None), P(None, None),
+                  P(None, None), P(None), P()),
+        out_specs=(P(DATA_AXIS, None), P(None, None), P(None, None)))(
+            opp.X, state.C, lm, coef_blk, idx_blk.reshape(-1), a)
+
+    TtG = jnp.einsum("bdc,bd->dc", Grows.reshape(B, d, d), coef_blk)
+    TtC = jnp.einsum("bdc,bd->dc", Crows.reshape(B, d, d), coef_blk)
+    W_new = A.batch_w_update(state, TtC, TtG, a)
+    return dataclasses.replace(state, C=C_new, W=W_new, m=state.m + B)
+
+
 def sharded_accum_step(K, state: AccumState, mesh, *,
                        use_kernel: bool | None = None) -> AccumState:
     """``apply.accum_step`` on a row-sharded operator (standalone form: pads
@@ -392,6 +448,20 @@ def sharded_accum_step(K, state: AccumState, mesh, *,
         use_kernel = A.default_use_kernel()
     opp, st = _pad_engine(op, state, mesh)
     return _unpad_state(_sharded_step(opp, st, mesh, use_kernel, op.n), op.n)
+
+
+def sharded_accum_grow_batched(K, state: AccumState, B: int, mesh, *,
+                               use_kernel: bool | None = None) -> AccumState:
+    """``apply.accum_grow_batched`` on a row-sharded operator: all B slabs in
+    one mapped sweep per shard (standalone form: pads/unpads around the
+    batch; the doubling driver pads once instead)."""
+    mesh = resolve_mesh(mesh)
+    op = _operator_required(K)
+    if use_kernel is None:
+        use_kernel = A.default_use_kernel()
+    opp, st = _pad_engine(op, state, mesh)
+    return _unpad_state(_sharded_batched(opp, st, B, mesh, use_kernel, op.n),
+                        op.n)
 
 
 def sharded_accum_grow(K, state: AccumState, steps: int, mesh, *,
@@ -408,12 +478,42 @@ def sharded_accum_grow(K, state: AccumState, steps: int, mesh, *,
     return _unpad_state(jax.lax.fori_loop(0, steps, body, st), op.n)
 
 
+def sharded_accum_grow_doubling(
+    K, state: AccumState, mesh, *, tol: float, estimator,
+    use_kernel: bool | None = None,
+) -> tuple[AccumState, jax.Array]:
+    """The doubling schedule on the sharded engine: the SHARED
+    ``apply.doubling_ladder`` driver (so the stopping decisions — hence the
+    chosen m — cannot drift from the single-device engine run with the same
+    draws and a matching estimator), with each batch ONE mapped sweep over
+    the shards.  Returns ``(state, passes)``."""
+    mesh = resolve_mesh(mesh)
+    op = _operator_required(K)
+    if use_kernel is None:
+        use_kernel = A.default_use_kernel()
+    opp, st = _pad_engine(op, state, mesh)
+
+    def apply_batch(s, B):
+        return _sharded_batched(opp, s, B, mesh, use_kernel, op.n)
+
+    state, passes = A.doubling_ladder(st, st.m_max, tol, apply_batch,
+                                      estimator)
+    return _unpad_state(state, op.n), passes
+
+
 def sharded_accum_grow_adaptive(
     K, state: AccumState, mesh, *, tol: float, estimator,
     check_every: int = 1, use_kernel: bool | None = None,
+    schedule: str = "unit",
 ) -> AccumState:
     """Adaptive growth with the sharded step; ``estimator`` sees states whose
-    C is padded to the mesh (the shard-aware factories below handle that)."""
+    C is padded to the mesh (the shard-aware factories below handle that).
+    ``schedule="doubling"`` delegates to the batched rank-B ladder."""
+    if schedule == "doubling":
+        state, _ = sharded_accum_grow_doubling(
+            K, state, mesh, tol=tol, estimator=estimator,
+            use_kernel=use_kernel)
+        return state
     mesh = resolve_mesh(mesh)
     op = _operator_required(K)
     if use_kernel is None:
@@ -490,22 +590,32 @@ def sharded_grow_sketch_both(
     key: jax.Array, K, d: int, mesh, *, m_max: int = 32,
     tol: float | None = None, probs: jax.Array | None = None,
     signed: bool = True, estimator=None, check_every: int = 1,
-    use_kernel: bool | None = None,
+    use_kernel: bool | None = None, schedule: str = "doubling",
 ):
     """The mesh branch of ``apply.grow_sketch_both``: identical RNG (the
     pre-draw happens replicated, before anything is sharded), sharded growth,
-    same return contract."""
+    same return contract (``schedule="doubling"`` by default — batched
+    rank-B passes, ``info["passes"]`` counts them)."""
     mesh = resolve_mesh(mesh)
     op = _operator_required(K)
     state = A.accum_init(key, op.n, d, m_max, probs, signed=signed)
+    passes = None
     if tol is None:
-        state = sharded_accum_grow(op, state, m_max, mesh,
-                                   use_kernel=use_kernel)
+        # one batched mapped sweep, as in the single-device driver
+        state = sharded_accum_grow_batched(op, state, m_max, mesh,
+                                           use_kernel=use_kernel)
+        passes = jnp.ones((), jnp.int32)
     else:
         if estimator is None:
             estimator = make_sharded_holdout_estimator(
                 jax.random.fold_in(key, 0x5E1D), op, mesh)
-        state = sharded_accum_grow_adaptive(
-            op, state, mesh, tol=tol, estimator=estimator,
-            check_every=check_every, use_kernel=use_kernel)
-    return A.finish_grow(state, m_max)
+        if schedule == "doubling":
+            state, passes = sharded_accum_grow_doubling(
+                op, state, mesh, tol=tol, estimator=estimator,
+                use_kernel=use_kernel)
+        else:
+            state = sharded_accum_grow_adaptive(
+                op, state, mesh, tol=tol, estimator=estimator,
+                check_every=check_every, use_kernel=use_kernel,
+                schedule=schedule)
+    return A.finish_grow(state, m_max, passes=passes)

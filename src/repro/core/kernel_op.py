@@ -84,6 +84,44 @@ def stream_cols(
     return _scan_row_chunks(Xq, chunk, _block)
 
 
+def stream_cols_slabs(
+    Xq: jax.Array, landmarks: jax.Array, coef: jax.Array, kernel_fn,
+    *, chunk: int | None = None,
+) -> jax.Array:
+    """Multi-slab C = K(Xq, ·)·S accumulated SLAB-BY-SLAB — the batched
+    engine's streaming twin.
+
+    A ``lax.scan`` over the m slabs evaluates each slab's (chunk, d) kernel
+    blocks at the NARROW GEMM shape the row-streamed backends are fastest at
+    and folds them into the (nq, d) accumulator: the (nq, m·d) wide slab of
+    ``stream_cols`` never exists, and peak memory is O(nq·d + chunk·d).
+    Measured on the CPU bench host, XLA's wide-output GEMM tiling degrades
+    ~2× by m·d = 1024, so at batch sizes B ≥ 2 this formulation is the fast
+    one (the Pallas matfree kernel keeps the wide block — the MXU wants it).
+    Returns (nq, d), f32-accumulated (f64 inputs stay f64)."""
+    m, d = coef.shape
+    p = Xq.shape[-1]
+    acc_t = jnp.promote_types(jnp.float32, jnp.result_type(Xq.dtype, coef.dtype))
+    if chunk is None:
+        # the (chunk, d) kernel block is the transient peak — same ~16 MiB
+        # budget as everywhere else
+        chunk = max(8, (4 * 1024 * 1024) // max(d, 1))
+    lmr = landmarks.reshape(m, d, p)
+    cf = coef.astype(acc_t)
+
+    def body(acc, slab):
+        lm_b, cf_b = slab
+
+        def blk(xb):
+            return kernel_fn(xb, lm_b).astype(acc_t)
+
+        return acc + _scan_row_chunks(Xq, chunk, blk) * cf_b[None, :], None
+
+    acc0 = jnp.zeros((Xq.shape[0], d), acc_t)
+    acc, _ = jax.lax.scan(body, acc0, (lmr, cf))
+    return acc
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class KernelOperator:

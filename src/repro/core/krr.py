@@ -314,7 +314,7 @@ def krr_sketched_fit_adaptive(
     tol: float = 1e-2, m_max: int = 32, probs: jax.Array | None = None,
     estimator=None, check_every: int = 1,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
-    use_kernel: bool | None = None, mesh=None,
+    use_kernel: bool | None = None, mesh=None, schedule: str = "doubling",
 ) -> SketchedKRR:
     """Sketched KRR with the sketch size chosen by the progressive engine:
     grow m one slab at a time (O(n·d) incremental (C, W) updates) until the
@@ -323,15 +323,18 @@ def krr_sketched_fit_adaptive(
 
     This is the paper's rescue of suboptimal sampling: callers specify an
     error target, not m, and cheap uniform / approximate-leverage
-    probabilities simply buy more slabs.  ``K`` may be dense or a
-    ``KernelOperator`` (the engine then grows matrix-free: each slab is an
-    O(n·d) kernel-eval column block, the holdout estimator a principal
-    submatrix of kernel evals), and ``mesh`` (operator only) runs the whole
-    growth data-parallel with identical index draws."""
+    probabilities simply buy more slabs.  Growth runs on the DOUBLING
+    schedule by default — batched rank-B slabs, O(log m) data passes
+    (``info["passes"]``); pass ``schedule="unit"`` for one-slab-per-pass.
+    ``K`` may be dense or a ``KernelOperator`` (the engine then grows
+    matrix-free: each batch is ONE kernel-eval column-block sweep), and
+    ``mesh`` (operator only) runs the whole growth data-parallel with
+    identical index draws."""
     op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
-        check_every=check_every, use_kernel=use_kernel, mesh=mesh)
+        check_every=check_every, use_kernel=use_kernel, mesh=mesh,
+        schedule=schedule)
     theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted,
@@ -344,16 +347,18 @@ def krr_sketched_fit_pcg_adaptive(
     tol: float = 1e-2, m_max: int = 32, iters: int = 30,
     probs: jax.Array | None = None, estimator=None, check_every: int = 1,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
-    use_kernel: bool | None = None, mesh=None,
+    use_kernel: bool | None = None, mesh=None, schedule: str = "doubling",
 ) -> SketchedKRR:
     """Adaptive-m Falkon-style PCG: the progressive engine grows (C, W) to the
-    error target, then CG reuses the incremental pair directly — the d×d
-    preconditioner never changes size while m grows (paper §3.3).  ``K`` may
-    be dense or a matrix-free ``KernelOperator`` (required for ``mesh``)."""
+    error target (doubling schedule by default — O(log m) data passes), then
+    CG reuses the incremental pair directly — the d×d preconditioner never
+    changes size while m grows (paper §3.3).  ``K`` may be dense or a
+    matrix-free ``KernelOperator`` (required for ``mesh``)."""
     op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
-        check_every=check_every, use_kernel=use_kernel, mesh=mesh)
+        check_every=check_every, use_kernel=use_kernel, mesh=mesh,
+        schedule=schedule)
     theta = _pcg_solve(C, W, y, lam, iters, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, C @ theta,

@@ -269,6 +269,17 @@ class AccumState:
     def d(self) -> int:
         return self.indices.shape[1]
 
+    def grow_batched(self, K, B: int, *, use_kernel: bool | None = None,
+                     mesh=None, donate: bool = True) -> "AccumState":
+        """Fold the next ``B`` pre-drawn slabs into (C, W) in ONE pass over
+        the data (``repro.core.apply.accum_grow_batched`` — lazy import, the
+        engine lives there): bitwise-identical draws to B sequential steps,
+        one read of K (or one kernel-eval sweep over X) instead of B."""
+        from repro.core.apply import accum_grow_batched
+
+        return accum_grow_batched(K, self, B, use_kernel=use_kernel,
+                                  mesh=mesh, donate=donate)
+
     def sketch(self) -> AccumSketch:
         """The AccumSketch accumulated so far (host-side: m must be concrete)."""
         m = int(self.m)

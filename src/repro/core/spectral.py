@@ -175,7 +175,7 @@ def spectral_cluster(
     m: int | None = None, tol: float | None = None, m_max: int = 32,
     probs: jax.Array | None = None, normalized: bool = True,
     use_kernel: bool | None = None, kmeans_restarts: int = 4,
-    kmeans_iters: int = 25, mesh=None,
+    kmeans_iters: int = 25, mesh=None, schedule: str = "doubling",
 ) -> SpectralResult:
     """Sketched spectral clustering of the affinity matrix K.
 
@@ -187,8 +187,10 @@ def spectral_cluster(
     Pipeline: sketch → (C, W) → top-``n_clusters`` eigenvector embedding of
     the (normalized) sketched affinity → row-normalize → k-means.  Exactly one
     of ``m`` (fixed sketch size, fused ``sketch_both`` kernel path) or ``tol``
-    (error target, progressive accumulation engine picks m ≤ m_max) should be
-    given; ``m=None, tol=None`` defaults to the fixed fused path at m=m_max.
+    (error target, progressive accumulation engine picks m ≤ m_max — batched
+    rank-B growth on the doubling ``schedule`` by default, O(log m) data
+    passes) should be given; ``m=None, tol=None`` defaults to the fixed fused
+    path at m=m_max.
 
     ``mesh`` (operator only) computes (C, W) — the only n·m·d-sized work —
     data-parallel over a ``("data",)`` device mesh with identical sketch
@@ -201,7 +203,7 @@ def spectral_cluster(
             raise ValueError("pass either m= or tol=, not both")
         sk, C, W, info = A.grow_sketch_both(
             ksk, K, d, m_max=m_max, tol=tol, probs=probs,
-            use_kernel=use_kernel, mesh=mesh)
+            use_kernel=use_kernel, mesh=mesh, schedule=schedule)
     else:
         sk = make_accum_sketch(ksk, K.shape[0], d, m_max if m is None else m,
                                probs)

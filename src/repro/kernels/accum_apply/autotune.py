@@ -1,0 +1,168 @@
+"""Measured autotune cache for the accum_apply kernel family.
+
+PR 1's block sizes came from a hand-maintained static table keyed on exact
+shapes, with a VMEM-budget heuristic for everything else — fine for the
+benchmark anchors, wrong for any shape nobody measured.  This module replaces
+that with a MEASURED cache:
+
+  * the first eligible call at a (kernel, shape, dtype, backend) key times the
+    candidate tilings once on the caller's real arrays and keeps the winner;
+  * winners persist to a JSON cache (``REPRO_AUTOTUNE_CACHE``, default
+    ``~/.cache/repro/autotune.json``) so later processes skip the measurement;
+  * a corrupt, missing, or unwritable cache degrades silently to the static
+    table / heuristic — autotuning must never be able to break a run.
+
+Measurement only happens when it can be meaningful:
+
+  * the entry point's arrays must be CONCRETE (under ``jit`` tracing the
+    inputs are tracers and nothing can be timed — the cache/table answer is
+    used instead, so jitted callers compile against the persisted winner);
+  * ``REPRO_AUTOTUNE`` gates it (default: on for compiled TPU kernels, off in
+    interpret mode, where timings measure the interpreter's dispatch, not the
+    tiling — benchmarks force it on explicitly for the cold/warm numbers).
+
+All reads go through ``os.environ`` at call time so tests can monkeypatch the
+cache location and the gate without reloads.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import jax
+
+from repro.util import env_flag
+
+ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+ENV_GATE = "REPRO_AUTOTUNE"
+
+# Measured-good block sizes from the PR-1 benchmark host, keyed
+# (R, N, d, m, dtype-name) — the FALLBACK when the measured cache has no
+# entry and measurement is gated off (tracing, interpret mode, disabled).
+STATIC_TABLE: dict[tuple[int, int, int, int, str], tuple[int, int]] = {
+    (4096, 8192, 64, 4, "float32"): (256, 64),
+    (4096, 8192, 64, 4, "bfloat16"): (256, 64),
+    (8192, 8192, 64, 4, "float32"): (256, 64),
+    (4096, 8192, 128, 4, "float32"): (256, 128),
+    (4096, 4096, 64, 4, "float32"): (512, 64),
+    (1024, 1024, 64, 4, "float32"): (256, 64),
+}
+
+# in-memory mirror of the JSON file, keyed by cache path so tests that
+# repoint REPRO_AUTOTUNE_CACHE never see another file's entries
+_MEM: dict[str, dict[str, list[int]]] = {}
+
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get(ENV_CACHE)
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def measure_enabled() -> bool:
+    """Measure by default only where timings are meaningful: compiled TPU.
+    Interpret-mode timings rank interpreter dispatch, not tilings.
+    Override with REPRO_AUTOTUNE=0/1."""
+    return env_flag(ENV_GATE, jax.default_backend() == "tpu")
+
+
+def _load(path: pathlib.Path) -> dict[str, list[int]]:
+    key = str(path)
+    if key in _MEM:
+        return _MEM[key]
+    entries: dict[str, list[int]] = {}
+    try:
+        raw = json.loads(path.read_text())
+        # validate hard: a corrupt cache must fall back, not crash
+        if isinstance(raw, dict):
+            for k, v in raw.items():
+                if (isinstance(k, str) and isinstance(v, list)
+                        and all(isinstance(x, int) and x > 0 for x in v)):
+                    entries[k] = v
+    except (OSError, ValueError):
+        entries = {}
+    _MEM[key] = entries
+    return entries
+
+
+def _store(path: pathlib.Path, entries: dict[str, list[int]]) -> None:
+    """Best-effort atomic persist; an unwritable cache dir is not an error."""
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+        tmp.write_text(json.dumps(entries, indent=2, sort_keys=True) + "\n")
+        tmp.replace(path)
+    except OSError:
+        pass
+
+
+def _key(kind: str, shape_key: tuple, dtype, interpret: bool) -> str:
+    backend = jax.default_backend() + ("/interpret" if interpret else "")
+    parts = [kind, *map(str, shape_key), jax.numpy.dtype(dtype).name, backend]
+    return "|".join(parts)
+
+
+def lookup(kind: str, shape_key: tuple, dtype, interpret: bool,
+           arity: int | None = None) -> tuple[int, ...] | None:
+    """The persisted winner for this key, or None (missing/corrupt cache).
+    ``arity`` rejects entries of the wrong length — a hand-edited or
+    stale-schema entry must fall back, not crash the caller's unpack."""
+    entry = _load(cache_path()).get(_key(kind, shape_key, dtype, interpret))
+    if not entry or (arity is not None and len(entry) != arity):
+        return None
+    return tuple(entry)
+
+
+def record(kind: str, shape_key: tuple, dtype, interpret: bool,
+           blocks: tuple[int, ...]) -> None:
+    path = cache_path()
+    entries = dict(_load(path))
+    entries[_key(kind, shape_key, dtype, interpret)] = [int(b) for b in blocks]
+    _MEM[str(path)] = entries
+    _store(path, entries)
+
+
+def _time_once(fn) -> float:
+    """One warmup (compile) + one timed rep; failures rank last."""
+    try:
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+    except Exception:
+        return float("inf")
+
+
+def measured_blocks(
+    kind: str, shape_key: tuple, dtype, interpret: bool,
+    candidates: list[tuple[int, ...]], bench_fn, fallback: tuple[int, ...],
+    concrete: bool,
+) -> tuple[int, ...]:
+    """The autotune decision for one kernel call site.
+
+    Resolution order: persisted/measured cache hit → (if ``concrete`` inputs
+    and the gate allows) time ``bench_fn(blocks)`` for each candidate once,
+    persist and return the winner → ``fallback`` (the static table /
+    heuristic answer).  ``bench_fn`` runs the caller's actual kernel on its
+    actual arrays, so the measurement is of the real workload."""
+    hit = lookup(kind, shape_key, dtype, interpret, arity=len(fallback))
+    if hit is not None:
+        return hit
+    if not concrete or not measure_enabled() or not candidates:
+        return fallback
+    candidates = list(dict.fromkeys(candidates))
+    timings = [(_time_once(lambda c=c: bench_fn(c)), c) for c in candidates]
+    best_t, best = min(timings, key=lambda tc: tc[0])
+    if best_t == float("inf"):
+        return fallback
+    record(kind, shape_key, dtype, interpret, best)
+    return best
+
+
+def is_concrete(*arrays) -> bool:
+    """True iff no argument is a tracer — the only situation where timing the
+    kernel on the caller's arrays is possible."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)

@@ -309,6 +309,117 @@ def accum_step_slab(
 
 
 # --------------------------------------------------------------------------- #
+# batched rank-B progressive growth — B slabs folded in ONE sweep over K
+# --------------------------------------------------------------------------- #
+
+def _grow_kernel(idx_ref, coef_ref, a_ref, K_ref, Cin_ref, C_ref, TtG_ref,
+                 TtC_ref, acc_ref, *, m: int, bm: int, bn: int, d: int):
+    r, c = pl.program_id(0), pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    # T chunk for this grid step's K columns: T rows [c·bn, (c+1)·bn).  The B
+    # slabs enter as ONE (m=B)-row coefficient block already normalized for
+    # the grown size t+B — the per-step sqrt(k/(k+1)) survivor rescales
+    # telescope into the single scalar ``a`` applied to Cin below.
+    scols = _coef_block(idx_ref, coef_ref, base=c * bn, nrows=bn,
+                        j0=0, ncols=d, m=m)                       # (bn, d)
+    part = jax.lax.dot_general(
+        K_ref[...].astype(jnp.float32), scols,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                             # (bm, d)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = part
+
+    @pl.when(c > 0)
+    def _accum():
+        acc_ref[...] = acc_ref[...] + part
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        G_tile = acc_ref[...]                                     # K·T row tile
+        Cin_tile = Cin_ref[...].astype(jnp.float32)
+        C_ref[...] = (a_ref[0].astype(jnp.float32) * Cin_tile
+                      + G_tile).astype(C_ref.dtype)
+        # fold BOTH d×d W pieces while the tiles are VMEM-resident:
+        # TᵀK T = Tᵀ(K T) = ΣᵣTᵣᵀ Gᵣ and TᵀC_old = ΣᵣTᵣᵀ Cinᵣ — no second
+        # pass over K, G, or C
+        trows = _coef_block(idx_ref, coef_ref, base=r * bm, nrows=bm,
+                            j0=0, ncols=d, m=m)                   # (bm, d)
+        tg = jax.lax.dot_general(
+            trows, G_tile, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        tc = jax.lax.dot_general(
+            trows, Cin_tile, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(r == 0)
+        def _w_init():
+            TtG_ref[...] = tg
+            TtC_ref[...] = tc
+
+        @pl.when(r > 0)
+        def _w_accum():
+            TtG_ref[...] = TtG_ref[...] + tg
+            TtC_ref[...] = TtC_ref[...] + tc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def accum_grow_slabs(
+    K: jax.Array, idx: jax.Array, coef: jax.Array, Cin: jax.Array,
+    a: jax.Array, *, bm: int = 256, bn: int = 2048, interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched rank-B progressive increment in ONE grid sweep over K:
+
+        C_new = a·Cin + K·T        (n, d)
+        TᵀG   = Tᵀ K T             (d, d)   — from the G tiles, in-kernel
+        TᵀC   = Tᵀ Cin             (d, d)   — from the Cin tiles, in-kernel
+
+    where T is the B-slab batch block (idx/coef of shape (B, d), coefficients
+    normalized for the grown size) and ``a`` the telescoped survivor rescale,
+    riding in SMEM via scalar prefetch.  The caller assembles
+    W_new = a²·W + a·(TᵀC + TᵀCᵀ) + TᵀG — every W piece comes out of the same
+    single pass that produced C, so folding B slabs reads K exactly once
+    (B sequential ``accum_step_slab`` launches read it B times).
+
+    Grid (R/bm, N/bn), column chunks innermost, same accumulation scheme as
+    ``accum_sketch_both``; K may be rectangular from padding as long as every
+    index is < min(R, N)."""
+    R, N = K.shape
+    m, d = idx.shape
+    bm = min(bm, R)
+    bn = min(bn, N)
+    assert R % bm == 0 and N % bn == 0, (R, N, bm, bn)
+    assert Cin.shape == (R, d), (Cin.shape, R, d)
+    grid = (R // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_grow_kernel, m=m, bm=bm, bn=bn, d=d),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,             # idx, coef, a in SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bn), lambda r, c, *_: (r, c)),
+                pl.BlockSpec((bm, d), lambda r, c, *_: (r, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, d), lambda r, c, *_: (r, 0)),
+                pl.BlockSpec((d, d), lambda r, c, *_: (0, 0)),
+                pl.BlockSpec((d, d), lambda r, c, *_: (0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((R, d), Cin.dtype),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )(idx, coef, a, K, Cin)
+
+
+# --------------------------------------------------------------------------- #
 # matrix-free C = K(X, X)·S — fused kernel-eval → GEMM, K never materialized
 # --------------------------------------------------------------------------- #
 

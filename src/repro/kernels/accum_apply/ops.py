@@ -4,8 +4,12 @@ This layer makes the kernels shape- and backend-agnostic:
 
   * ``interpret`` defaults to backend autodetection — compiled Mosaic on TPU,
     interpreter everywhere else (CPU CI, tests).
-  * block sizes come from a small autotune table keyed on
-    (R, N, d, m, dtype) with a VMEM-budget heuristic fallback;
+  * block sizes come from a MEASURED autotune cache: the first eager call at
+    a (shape, dtype, backend) key times candidate tilings on the caller's
+    real arrays and persists the winner to ``REPRO_AUTOTUNE_CACHE`` (default
+    ``~/.cache/repro/autotune.json``); jitted/traced calls and disabled or
+    corrupt caches fall back to the static table + VMEM-budget heuristic
+    (``autotune.py``);
   * arbitrary shapes are zero-padded up to the block grid and sliced back
     (padded K rows/columns contribute nothing; padded sketch columns carry
     coef 0);
@@ -17,7 +21,11 @@ This layer makes the kernels shape- and backend-agnostic:
     (M streamed in row tiles — no Mᵀ copy);
   * ``sketch_step_kernel`` is the single-slab accumulate entry point used by
     the progressive engine: a·C + K·T̃ in one fused launch (MXU path for the
-    m → m+1 increment).
+    m → m+1 increment);
+  * ``accum_grow_kernel`` is the BATCHED rank-B accumulate entry point:
+    a·C + K·T for a B-slab batch block plus both d×d W pieces (TᵀKT, TᵀC)
+    folded from the SAME single sweep over K — the engine's m → m+B growth
+    reads K once instead of B times.
 """
 from __future__ import annotations
 
@@ -25,9 +33,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sketch import AccumSketch
+from repro.kernels.accum_apply import autotune
 from repro.kernels.accum_apply.kernel import (
     accum_apply,
     accum_apply_left,
+    accum_grow_slabs,
     accum_sketch_both,
     accum_step_slab,
     matfree_apply,
@@ -44,31 +54,43 @@ def default_interpret() -> bool:
     return env_flag("REPRO_PALLAS_INTERPRET", jax.default_backend() != "tpu")
 
 
-# Measured-good block sizes, keyed (R, N, d, m, dtype-name). N is the
-# per-chunk width (≤ MAX_COLS). Fallback heuristic below.
-_BLOCK_TABLE: dict[tuple[int, int, int, int, str], tuple[int, int]] = {
-    (4096, 8192, 64, 4, "float32"): (256, 64),
-    (4096, 8192, 64, 4, "bfloat16"): (256, 64),
-    (8192, 8192, 64, 4, "float32"): (256, 64),
-    (4096, 8192, 128, 4, "float32"): (256, 128),
-    (4096, 4096, 64, 4, "float32"): (512, 64),
-    (1024, 1024, 64, 4, "float32"): (256, 64),
-}
+def autotune_blocks(R: int, N: int, d: int, m: int, dtype,
+                    *, interpret: bool | None = None) -> tuple[int, int]:
+    """(bm, bd) for the gather→GEMM kernel: measured-cache hit → static table
+    hit → VMEM-budget heuristic.
 
-
-def autotune_blocks(R: int, N: int, d: int, m: int, dtype) -> tuple[int, int]:
-    """(bm, bd) for the gather→GEMM kernel: exact table hit, else heuristic.
+    This is the TABLE side only — it never times anything, so it is safe at
+    trace time.  The entry points below measure candidate tilings on their
+    real (concrete) arrays via ``autotune.measured_blocks`` and persist the
+    winner, which this lookup then serves to every later (including jitted)
+    call at the same (shape, dtype, backend) key.
 
     Heuristic: keep the K tile ≤ ~8 MiB of VMEM (bm·min(N, MAX_COLS)·itemsize)
     and make the GEMM lane dimension as wide as d allows (≤ 128 lanes)."""
+    if interpret is None:
+        interpret = default_interpret()
+    hit = autotune.lookup("accum_apply", (R, N, d, m), dtype, interpret,
+                          arity=2)
+    if hit is not None:
+        return hit
     key = (R, N, d, m, jnp.dtype(dtype).name)
-    if key in _BLOCK_TABLE:
-        return _BLOCK_TABLE[key]
+    if key in autotune.STATIC_TABLE:
+        return autotune.STATIC_TABLE[key]
     itemsize = jnp.dtype(dtype).itemsize
     ncols = min(N, MAX_COLS)
     bm = max(8, min(256, (8 * 1024 * 1024) // max(ncols * itemsize, 1)))
     bd = min(d, 128)
     return bm, bd
+
+
+def _gemm_candidates(R: int, d: int, fallback: tuple[int, int]) -> list[tuple[int, int]]:
+    """Candidate (bm, bd) tilings for the gather→GEMM family: the fallback
+    plus a taller and a shorter row tile (the lane dimension is d-bound)."""
+    bds = {fallback[1], min(d, 64), min(d, 128)}
+    bms = {fallback[0], min(R, 128), min(R, 512)}
+    cands = [(bm, bd) for bm in sorted(bms) for bd in sorted(bds)
+             if bm >= 8 and bd >= 1]
+    return cands[:6]
 
 
 def _pad_rows(K: jax.Array, mult: int) -> jax.Array:
@@ -109,10 +131,21 @@ def sketch_right_kernel(
         interpret = default_interpret()
     R, N = K.shape
     m, d = sk.indices.shape
-    a_bm, a_bd = autotune_blocks(R, N, d, m, K.dtype)
-    bm = a_bm if bm is None else bm
-    bd = a_bd if bd is None else bd
     coef = sk.coef.astype(jnp.float32)
+    if bm is None and bd is None:
+        fb = autotune_blocks(R, N, d, m, K.dtype, interpret=interpret)
+        # measure only the single-launch regime — the wide-K scan re-enters
+        # this function per chunk and would nest measurements
+        bm, bd = autotune.measured_blocks(
+            "accum_apply", (R, N, d, m), K.dtype, interpret,
+            _gemm_candidates(R, d, fb) if N <= MAX_COLS else [],
+            lambda c: _apply_padded(K, sk.indices, coef, bm=c[0], bd=c[1],
+                                    interpret=interpret),
+            fb, concrete=autotune.is_concrete(K, sk.indices, coef))
+    else:
+        a_bm, a_bd = autotune_blocks(R, N, d, m, K.dtype, interpret=interpret)
+        bm = a_bm if bm is None else bm
+        bd = a_bd if bd is None else bd
     if N <= MAX_COLS:
         return _apply_padded(K, sk.indices, coef, bm=bm, bd=bd,
                              interpret=interpret)
@@ -191,7 +224,7 @@ def sketch_step_kernel(
         interpret = default_interpret()
     R, N = K.shape
     d = idx_row.shape[0]
-    a_bm, a_bd = autotune_blocks(R, N, d, 1, K.dtype)
+    a_bm, a_bd = autotune_blocks(R, N, d, 1, K.dtype, interpret=interpret)
     bm = a_bm if bm is None else bm
     bd = a_bd if bd is None else bd
     coef32 = coef_row.astype(jnp.float32)
@@ -217,6 +250,56 @@ def sketch_step_kernel(
     out = accum_step_slab(Kp, idx_p, coef_p, Cp, a_arr, bm=bm_e, bd=bd_e,
                           interpret=interpret)
     return out[:R, :d]
+
+
+def accum_grow_kernel(
+    K: jax.Array, idx_blk: jax.Array, coef_blk: jax.Array, C: jax.Array,
+    a: jax.Array, *, bm: int | None = None, bn: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched rank-B accumulate entry point: fold the B-slab batch block
+    (idx/coef of shape (B, d), coefficients at the grown normalization) into
+    the running C in ONE sweep over K, returning ``(C_new, TᵀG, TᵀC)`` with
+    C_new = a·C + K·T and both d×d W pieces folded from the same pass —
+    K is read once for all B slabs where B sequential ``sketch_step_kernel``
+    calls read it B times.
+
+    Arbitrary (R, N, d) are padded to the block grid and sliced back (padded
+    rows/columns of K are zero and padded sketch columns carry coefficient 0,
+    so every output is exact).  Block sizes come from the measured autotune
+    cache when available."""
+    if interpret is None:
+        interpret = default_interpret()
+    R, N = K.shape
+    B, d = idx_blk.shape
+    coef32 = coef_blk.astype(jnp.float32)
+    a_arr = jnp.asarray(a, jnp.float32).reshape((1,))
+    idx32 = idx_blk.astype(jnp.int32)
+
+    def run(blocks):
+        bm_e, bn_e = min(blocks[0], R), min(blocks[1], N)
+        rpad, cpad = (-R) % bm_e, (-N) % bn_e
+        Kp = jnp.pad(K, ((0, rpad), (0, cpad))) if (rpad or cpad) else K
+        idx_p, coef_p = _pad_sketch(idx32, coef32, min(8, max(d, 1)))
+        dpad = idx_p.shape[1] - d
+        Cp = _pad_rows(C, bm_e)
+        if dpad:
+            Cp = jnp.pad(Cp, ((0, 0), (0, dpad)))
+        Cn, TtG, TtC = accum_grow_slabs(Kp, idx_p, coef_p, Cp, a_arr,
+                                        bm=bm_e, bn=bn_e, interpret=interpret)
+        return Cn[:R, :d], TtG[:d, :d], TtC[:d, :d]
+
+    if bm is None and bn is None:
+        fb = autotune_both_blocks(N, interpret)
+        bm, bn = autotune.measured_blocks(
+            "accum_grow", (R, N, d, B), K.dtype, interpret,
+            [fb, (256, min(N, 2048)), (min(R, 1024), min(N, 4096))],
+            run, fb, concrete=autotune.is_concrete(K, idx_blk, coef_blk, C))
+    else:
+        fb = autotune_both_blocks(N, interpret)
+        bm = fb[0] if bm is None else bm
+        bn = fb[1] if bn is None else bn
+    return run((bm, bn))
 
 
 def expand_coef(coef: jax.Array, d: int) -> jax.Array:
@@ -251,11 +334,6 @@ def matfree_cols_kernel(
         interpret = default_interpret()
     nq, p = Xq.shape
     m, d = coef.shape
-    if bm is None:
-        # keep the f32 (bm, md) kernel slab + (bm, p) tile ≲ 8 MiB of VMEM
-        bm = max(8, min(1024, (2 * 1024 * 1024) // max(m * d + p, 1)))
-    bm_e = min(bm, nq)
-    Xp = _pad_rows(Xq, bm_e)
     Cmat = expand_coef(coef, d)
     pad_md = (-(m * d)) % 8
     if pad_md:
@@ -264,15 +342,38 @@ def matfree_cols_kernel(
     pad_d = (-d) % 8
     if pad_d:
         Cmat = jnp.pad(Cmat, ((0, 0), (0, pad_d)))
-    out = matfree_apply(Xp, landmarks, Cmat, kernel=kernel, bandwidth=bandwidth,
-                        nu=nu, bm=bm_e, interpret=interpret)
-    return out[:nq, :d]
+
+    def run(blocks):
+        bm_e = min(blocks[0], nq)
+        Xp = _pad_rows(Xq, bm_e)
+        out = matfree_apply(Xp, landmarks, Cmat, kernel=kernel,
+                            bandwidth=bandwidth, nu=nu, bm=bm_e,
+                            interpret=interpret)
+        return out[:nq, :d]
+
+    if bm is None:
+        # heuristic fallback: keep the f32 (bm, md) kernel slab + (bm, p)
+        # tile ≲ 8 MiB of VMEM
+        fb = (max(8, min(1024, (2 * 1024 * 1024) // max(m * d + p, 1))),)
+        (bm,) = autotune.measured_blocks(
+            "matfree_cols", (nq, p, d, m, kernel), Xq.dtype, interpret,
+            [fb, (min(nq, 256),), (min(nq, 1024),)], run, fb,
+            concrete=autotune.is_concrete(Xq, landmarks, coef))
+    return run((bm,))
 
 
-def autotune_both_blocks(n: int, interpret: bool) -> tuple[int, int]:
-    """(bm, bn) for the fused kernel. Compiled TPU wants VMEM-sized tiles
-    (bm·bn·4B ≤ 2 MiB); the interpreter wants few, large grid steps (per-step
-    dispatch dominates there — measured 3–4× on the CPU benchmark host)."""
+def autotune_both_blocks(n: int, interpret: bool, d: int = 0, m: int = 0,
+                         dtype=jnp.float32) -> tuple[int, int]:
+    """(bm, bn) for the fused single-sweep kernels: measured-cache hit first
+    (when ``d``/``m`` identify the shape), else the PR-1 defaults — compiled
+    TPU wants VMEM-sized tiles (bm·bn·4B ≤ 2 MiB); the interpreter wants few,
+    large grid steps (per-step dispatch dominates there — measured 3–4× on
+    the CPU benchmark host)."""
+    if d and m:
+        hit = autotune.lookup("sketch_both", (n, d, m), dtype, interpret,
+                              arity=2)
+        if hit is not None:
+            return hit
     if interpret:
         return min(2048, n), min(4096, n)
     return 256, 2048
@@ -293,14 +394,24 @@ def sketch_both_kernel(
     assert n == n2, "sketch_both_kernel expects square K"
     d = sk.d
     coef = sk.coef.astype(jnp.float32)
-    a_bm, a_bn = autotune_both_blocks(n, interpret)
-    bm_e = min(a_bm if bm is None else bm, n)
-    bn_e = min(a_bn if bn is None else bn, n)
-    # pad rows and columns of K to the (bm, bn) grid; pad d to the lane tile
-    rpad = (-n) % bm_e
-    cpad = (-n) % bn_e
-    Kp = jnp.pad(K, ((0, rpad), (0, cpad))) if (rpad or cpad) else K
     idx_p, coef_p = _pad_sketch(sk.indices, coef, min(8, max(sk.d, 1)))
-    C, W = accum_sketch_both(Kp, idx_p, coef_p, bm=bm_e, bn=bn_e,
-                             interpret=interpret)
-    return C[:n, :d], W[:d, :d]
+
+    def run(blocks):
+        bm_e, bn_e = min(blocks[0], n), min(blocks[1], n)
+        # pad rows and columns of K to the (bm, bn) grid
+        rpad, cpad = (-n) % bm_e, (-n) % bn_e
+        Kp = jnp.pad(K, ((0, rpad), (0, cpad))) if (rpad or cpad) else K
+        C, W = accum_sketch_both(Kp, idx_p, coef_p, bm=bm_e, bn=bn_e,
+                                 interpret=interpret)
+        return C[:n, :d], W[:d, :d]
+
+    if bm is None and bn is None:
+        fb = autotune_both_blocks(n, interpret, d, sk.m, K.dtype)
+        blocks = autotune.measured_blocks(
+            "sketch_both", (n, d, sk.m), K.dtype, interpret,
+            [fb, (256, min(n, 2048)), (min(n, 1024), min(n, 4096))], run, fb,
+            concrete=autotune.is_concrete(K, sk.indices, coef))
+    else:
+        fb = autotune_both_blocks(n, interpret, d, sk.m, K.dtype)
+        blocks = (fb[0] if bm is None else bm, fb[1] if bn is None else bn)
+    return run(blocks)

@@ -46,6 +46,25 @@ def sketch_both_ref(
     return C32.astype(K.dtype), W
 
 
+def accum_grow_ref(
+    K: jax.Array, idx: jax.Array, coef: jax.Array, Cin: jax.Array, a: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the batched-growth kernel: fold a B-slab batch block T
+    (idx/coef of shape (B, d), coefficients at the GROWN normalization) into
+    the running C with survivor rescale ``a``, and return the two d×d W
+    pieces derived from the same G = K·T:
+
+        C_new = a·Cin + G,   TᵀG = Tᵀ K T,   TᵀC = Tᵀ Cin.
+
+    All three in float32 off the f32 G, matching the fused kernel's VMEM
+    accumulator (the caller assembles W_new = a²W + a(TᵀC + TᵀCᵀ) + TᵀG)."""
+    G = accum_apply_ref(K.astype(jnp.float32), idx, coef)
+    C_new = jnp.asarray(a, jnp.float32) * Cin.astype(jnp.float32) + G
+    TtG = sketch_left_ref(idx, coef, G)
+    TtC = sketch_left_ref(idx, coef, Cin)
+    return C_new.astype(Cin.dtype), TtG, TtC
+
+
 def sketch_left_ref(idx: jax.Array, coef: jax.Array, M: jax.Array) -> jax.Array:
     """Oracle for the left-apply kernel: Sᵀ M via row gather + contraction.
 

@@ -148,7 +148,7 @@ class HloModule:
     def _trip_count(self, ins: _Instr) -> float:
         """Prefer XLA's known_trip_count backend_config; fall back to the
         largest constant in the condition computation."""
-        m = re.search(r'known_trip_count[^0-9]*(\d+)', ins.rest)
+        m = re.search(r"known_trip_count[^0-9]*(\d+)", ins.rest)
         if m:
             return float(m.group(1))
         cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
