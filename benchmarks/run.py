@@ -7,7 +7,9 @@ past-the-n²-wall numbers (KRR at n = 131072, dense refused) live in
 ``BENCH_matfree.json``; batched-vs-sequential growth and the autotune
 cold/warm timings live in ``BENCH_grow.json``; the sharded weak/strong
 scaling table (per-device C ∝ 1/D) lives in ``BENCH_distributed.json`` (run
-that suite under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+that suite under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+the sampling-scheme zoo's error-vs-m curves (uniform / leverage / poisson on
+the KRR anchor) live in ``BENCH_schemes.json``.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
@@ -15,7 +17,7 @@ that suite under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
   PYTHONPATH=src python -m benchmarks.run grow       # refresh BENCH_grow.json
 
 ``--smoke`` runs suites that honor it (``kernels``, ``matfree``, ``grow``,
-``distributed``) at tiny
+``distributed``, ``schemes``) at tiny
 shapes with a single rep — CI uses it to regenerate the JSONs on every PR
 without timing out; they are tagged ``"smoke": true`` so real trajectory
 numbers are never overwritten by CI artifacts.
@@ -28,7 +30,8 @@ import traceback
 
 from benchmarks import amm_bench, distributed_bench, falkon_bench, fig1_toy
 from benchmarks import fig2_approx_error, fig3_tradeoff, grow_bench
-from benchmarks import kernel_bench, matfree_bench, roofline, train_bench
+from benchmarks import kernel_bench, matfree_bench, roofline, schemes_bench
+from benchmarks import train_bench
 
 SUITES = {
     "fig1": fig1_toy.main,          # paper Fig. 1 (toy tradeoff)
@@ -39,6 +42,7 @@ SUITES = {
     "kernels": kernel_bench.main,   # Pallas kernels + O(nmd) claim
     "matfree": matfree_bench.main,  # matrix-free operator: past the n² wall
     "grow": grow_bench.main,        # batched rank-B growth + autotune cache
+    "schemes": schemes_bench.main,  # sampling-scheme zoo: error vs m
     "distributed": distributed_bench.main,  # sharded (C, W): weak/strong scaling
     "train": train_bench.main,      # end-to-end step throughput
     "roofline": roofline.main,      # dry-run roofline table

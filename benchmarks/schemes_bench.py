@@ -1,0 +1,126 @@
+"""Sampling-scheme zoo: error-vs-m curves for uniform / leverage / poisson.
+
+The paper's accumulation argument (§3) is scheme-agnostic: ANY unbiased
+sub-sampling design with E[S SᵀK] = K telescopes across slabs, so the same
+engine runs
+
+  * ``uniform``  — i.i.d. uniform column draws (the paper's baseline);
+  * ``leverage`` — ridge-leverage probabilities estimated MATRIX-FREE from
+    the sketch itself (``core.schemes.state_leverage_probs``) and refined
+    between doubling batches, so no O(n³) oracle is ever formed;
+  * ``poisson``  — independent Bernoulli row inclusion (Horvitz–Thompson
+    normalized), the classic survey-sampling design.
+
+For each scheme × m this suite grows a sketch with the progressive engine
+(``grow_sketch_both``, doubling schedule, tol=None) on the bimodal KRR
+anchor, solves sketched KRR, and records the in-sample error against the
+exact KRR fit — medians over ``seeds`` independent draws.  The headline
+derived quantity: the smallest m at which each scheme matches the UNIFORM
+scheme's error at m = m_anchor (leverage gets there at m ≤ m_anchor/2 on
+the full configuration).
+
+Run:   PYTHONPATH=src python -m benchmarks.run schemes
+Smoke: PYTHONPATH=src python -m benchmarks.run schemes --smoke
+       (tiny shapes, 2 seeds — CI's configuration; JSON tagged "smoke": true)
+
+Writes ``BENCH_schemes.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import bimodal_data, emit
+from repro.core import apply as A
+from repro.core import krr as R
+from repro.core.kernels_math import gaussian_kernel
+from repro.core.schemes import SCHEMES
+from repro.util import env_flag
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_schemes.json"
+
+# The acceptance anchor: n=2048 bimodal KRR at bandwidth 0.5, fit ridge 1e-5.
+# In this regime the m=1 sketch is noise-dominated (uniform error falls ~1.4x
+# from m=1 to m=16), so the scheme choice is visible; leverage scores are
+# estimated at the engine's coarse scheme_lam=1e-3 (statistical dimension
+# ≈ 24 ≈ d — the resolution a d-column sketch can actually capture).
+FULL = dict(n=2048, d=16, bandwidth=0.5, lam=1e-5, ms=[1, 2, 4, 8, 16, 32],
+            m_anchor=16, seeds=10)
+SMOKE = dict(n=256, d=8, bandwidth=0.5, lam=1e-4, ms=[1, 2, 4],
+             m_anchor=4, seeds=2)
+
+
+def bench_config() -> dict:
+    """Return the FULL or SMOKE shape dict (``REPRO_BENCH_SMOKE`` selects)."""
+    return SMOKE if env_flag("REPRO_BENCH_SMOKE", False) else FULL
+
+
+def error_curves(cfg: dict) -> dict[str, list[float]]:
+    """Median in-sample error vs m for every scheme, on the KRR anchor."""
+    X, y, _ = bimodal_data(jax.random.PRNGKey(0), cfg["n"])
+    K = gaussian_kernel(X, X, cfg["bandwidth"])
+    exact = R.krr_exact_fitted(K, y, cfg["lam"])
+
+    def one(scheme: str, m: int, seed: int) -> float:
+        sk, C, W, _ = A.grow_sketch_both(
+            jax.random.PRNGKey(100 + seed), K, cfg["d"], m_max=m, tol=None,
+            scheme=scheme)
+        model = R.krr_sketched_fit(K, y, cfg["lam"], sk)
+        return float(R.insample_error(model.fitted, exact))
+
+    curves: dict[str, list[float]] = {}
+    for scheme in SCHEMES:
+        curves[scheme] = [
+            float(np.median([one(scheme, m, s) for s in range(cfg["seeds"])]))
+            for m in cfg["ms"]
+        ]
+    return curves
+
+
+def crossing_m(curve: list[float], ms: list[int], target: float) -> int | None:
+    """Smallest m in ``ms`` whose error is ≤ ``target`` (None if never)."""
+    for m, e in zip(ms, curve):
+        if e <= target:
+            return m
+    return None
+
+
+def main() -> None:
+    """Run the scheme zoo and write ``BENCH_schemes.json``."""
+    cfg = bench_config()
+    curves = error_curves(cfg)
+    ms = cfg["ms"]
+    anchor_err = curves["uniform"][ms.index(cfg["m_anchor"])]
+    results: dict = {}
+    for scheme in SCHEMES:
+        cross = crossing_m(curves[scheme], ms, anchor_err)
+        tag = f"n{cfg['n']}_d{cfg['d']}"
+        emit(f"schemes_{scheme}_{tag}", 0.0,
+             "err@m=" + " ".join(f"{m}:{e:.2e}" for m, e in zip(ms, curves[scheme]))
+             + f"; matches uniform@m={cfg['m_anchor']} at m={cross}")
+        results[scheme] = {
+            "ms": ms,
+            "median_insample_error": curves[scheme],
+            "m_matching_uniform_anchor": cross,
+        }
+    results["uniform_anchor"] = {"m": cfg["m_anchor"], "error": anchor_err}
+    payload = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+        },
+        "config": cfg,
+        "smoke": env_flag("REPRO_BENCH_SMOKE", False),
+        "results": results,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("bench_json", 0.0, f"wrote {BENCH_PATH.name}")
+
+
+if __name__ == "__main__":
+    main()

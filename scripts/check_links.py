@@ -1,0 +1,71 @@
+"""Markdown link checker (stdlib only) for the repo's relative links.
+
+Scans the given markdown files for inline links/images and reference
+definitions, and verifies every RELATIVE target resolves to an existing file
+or directory (external http(s)/mailto links and pure #anchors are skipped;
+a #fragment on a relative link is checked against the target file's
+headings).  Exit 1 with a per-link report on any dangling target.
+
+Usage: python scripts/check_links.py README.md docs/*.md ...
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.M)
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, strip punctuation, dashes."""
+    h = re.sub(r"[`*_~\[\]()!]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return re.sub(r"\s+", "-", h).strip("-")
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    return {slugify(m.group(1)) for m in HEADING.finditer(path.read_text())}
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    text = md.read_text()
+    problems = []
+    targets = [m.group(1) for m in INLINE.finditer(text)]
+    targets += [m.group(1) for m in REFDEF.finditer(text)]
+    for raw in targets:
+        if raw.startswith(EXTERNAL) or raw.startswith("#"):
+            continue
+        target, _, frag = raw.partition("#")
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            problems.append(f"{md}: dangling link -> {raw}")
+        elif frag and resolved.is_file() and resolved.suffix == ".md":
+            if slugify(frag) not in anchors_of(resolved):
+                problems.append(f"{md}: missing anchor -> {raw}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    problems = []
+    for name in argv:
+        p = pathlib.Path(name)
+        if not p.exists():
+            problems.append(f"{name}: file not found")
+            continue
+        problems += check_file(p)
+    for line in problems:
+        print(line)
+    print(f"checked {len(argv)} file(s): "
+          f"{'FAIL' if problems else 'ok'} ({len(problems)} problem(s))")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -71,5 +71,14 @@ from repro.core.leverage import (
 )
 from repro.core.ksat import KSatResult, ksat_check
 from repro.core.amm import amm, amm_error
+from repro.core.schemes import (
+    SCHEMES,
+    poisson_inclusion,
+    poisson_pieces,
+    refresh_tail,
+    sketch_leverage_probs,
+    sketch_leverage_scores,
+    state_leverage_probs,
+)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

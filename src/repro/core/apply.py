@@ -159,17 +159,32 @@ def _psd_apply_pinv(W: jax.Array, B: jax.Array, jitter: float = 1e-6) -> jax.Arr
 
 
 def accum_init(key: jax.Array, n: int, d: int, m_max: int,
-               probs: jax.Array | None = None, *, signed: bool = True) -> AccumState:
+               probs: jax.Array | None = None, *, signed: bool = True,
+               scheme: str = "uniform") -> AccumState:
     """Draw all ``m_max`` sub-sampling matrices up front (same RNG scheme as
     ``make_accum_sketch``, so growing to m_max replays the one-shot draw at
     m_max exactly; a stop at m < m_max yields a prefix of that draw) and
-    return the empty accumulation state."""
-    sk = make_accum_sketch(key, n, d, m_max, probs, signed=signed)
+    return the empty accumulation state.
+
+    ``scheme`` threads to the constructor (``"poisson"`` pre-draws Poisson
+    slabs; ``"leverage"`` starts from ``probs`` — or uniform when ``None`` —
+    and lets the grow drivers refine the tail as m grows).  ``pdraw`` records
+    the probabilities of the initial draw."""
+    if scheme == "leverage":
+        # the engine refines leverage probs itself — seed the pre-draw from
+        # the caller's pilot distribution (or uniform), NOT the one-shot
+        # constructor, which demands explicit leverage probs
+        sk = make_accum_sketch(key, n, d, m_max, probs, signed=signed)
+        sk = dataclasses.replace(sk, scheme=scheme)
+    else:
+        sk = make_accum_sketch(key, n, d, m_max, probs, signed=signed,
+                               scheme=scheme)
     return AccumState(
         indices=sk.indices, signs=sk.signs, probs=sk.probs,
+        pdraw=jnp.take(sk.probs, sk.indices, axis=0),
         C=jnp.zeros((n, d), jnp.float32), W=jnp.zeros((d, d), jnp.float32),
         m=jnp.zeros((), jnp.int32), err=jnp.full((), jnp.inf, jnp.float32),
-        n=n,
+        n=n, scheme=scheme,
     )
 
 
@@ -188,7 +203,11 @@ def slab_pieces(state: AccumState):
                                            keepdims=False)
     sgn_new = jax.lax.dynamic_index_in_dim(state.signs, t, axis=0,
                                            keepdims=False)
-    p_new = jnp.take(state.probs, idx_new).astype(jnp.float32)
+    # at-draw probabilities, NOT take(probs, indices): the leverage scheme
+    # refines probs while m grows and the slab keeps the distribution it was
+    # actually drawn from
+    p_new = jax.lax.dynamic_index_in_dim(state.pdraw, t, axis=0,
+                                         keepdims=False).astype(jnp.float32)
     coef_new = sgn_new.astype(jnp.float32) / jnp.sqrt(d * (tf + 1.0) * p_new)
     a = jnp.sqrt(tf / (tf + 1.0))
     return idx_new, coef_new, a
@@ -220,7 +239,9 @@ def batch_pieces(state: AccumState, B: int):
     d = state.d
     idx_blk = jax.lax.dynamic_slice_in_dim(state.indices, t, B, axis=0)
     sgn_blk = jax.lax.dynamic_slice_in_dim(state.signs, t, B, axis=0)
-    p_blk = jnp.take(state.probs, idx_blk).astype(jnp.float32)
+    # at-draw probabilities (see slab_pieces) — leverage refines state.probs
+    p_blk = jax.lax.dynamic_slice_in_dim(state.pdraw, t, B,
+                                         axis=0).astype(jnp.float32)
     coef_blk = sgn_blk.astype(jnp.float32) / jnp.sqrt(d * (tf + B) * p_blk)
     a = jnp.sqrt(tf / (tf + B))
     return idx_blk, coef_blk, a
@@ -507,7 +528,7 @@ def make_hutchinson_estimator(key: jax.Array, K: jax.Array, num_probes: int = 8,
 
 
 def doubling_ladder(state: AccumState, m_max: int, tol: float, apply_batch,
-                    estimator) -> tuple[AccumState, jax.Array]:
+                    estimator, refine=None) -> tuple[AccumState, jax.Array]:
     """The shared doubling-schedule driver: static batch ladder, one
     ``lax.cond`` phase guard per batch (only the taken branch executes), the
     estimator once per batch.  ``apply_batch(state, B)`` is the backend —
@@ -515,17 +536,26 @@ def doubling_ladder(state: AccumState, m_max: int, tol: float, apply_batch,
     so the stopping decisions cannot drift between engines.  Returns
     ``(state, passes)``.
 
+    ``refine(state, phase) -> state`` (optional) runs after each executed
+    batch — the leverage scheme's probability refresh + tail redraw
+    (``schemes.refresh_tail``); it must preserve the state's pytree
+    structure (pure masking, no shape changes) so it composes with the
+    ``lax.cond`` phases.
+
     The schedule is laid out from the state's current m (assumed 0 under a
     tracer — the grow drivers always pass a fresh state); the per-phase
     guard ``m + B ≤ m_max`` makes overrunning the pre-drawn slabs impossible
     either way."""
     m0 = 0 if isinstance(state.m, jax.core.Tracer) else int(state.m)
     carry = (state, jnp.zeros((), jnp.int32))
-    for B in doubling_schedule(m0, m_max):
-        def do_batch(sp, B=B):
+    for i, B in enumerate(doubling_schedule(m0, m_max)):
+        def do_batch(sp, B=B, i=i):
             s, p = sp
             s = apply_batch(s, B)
-            return dataclasses.replace(s, err=estimator(s)), p + 1
+            s = dataclasses.replace(s, err=estimator(s))
+            if refine is not None:
+                s = refine(s, i)
+            return s, p + 1
 
         s, _ = carry
         pred = jnp.logical_and(s.err > tol, s.m + B <= m_max)
@@ -533,9 +563,38 @@ def doubling_ladder(state: AccumState, m_max: int, tol: float, apply_batch,
     return carry
 
 
+def make_leverage_refine(key: jax.Array, *, lam: float, mix: float = 0.1,
+                         signed: bool = True):
+    """Build the leverage scheme's per-phase refine callback for the grow
+    drivers: estimate ridge-leverage probabilities from the state's own
+    (C, SᵀC) via the Nyström lift and redraw the not-yet-accumulated slabs
+    from them.
+
+    SHARED by the single-device and sharded drivers (both construct it from
+    the same key), so the refreshed draws cannot drift between them.
+
+    Args:
+        key: base PRNG key; phase ``i`` folds in ``0x11E7 + i``.
+        lam: ridge level λ for the leverage scores.
+        mix: uniform mixing weight for the probabilities.
+        signed: draw Rademacher signs for redrawn slabs.
+
+    Returns:
+        ``refine(state, phase) -> state`` suitable for ``doubling_ladder``.
+    """
+    from repro.core import schemes as SCH
+
+    def refine(state: AccumState, phase: int) -> AccumState:
+        p_new = SCH.state_leverage_probs(state, lam, mix=mix)
+        return SCH.refresh_tail(state, jax.random.fold_in(key, 0x11E7 + phase),
+                                p_new, signed=signed)
+
+    return refine
+
+
 def accum_grow_doubling(K: jax.Array, state: AccumState, *, tol: float,
                         estimator, use_kernel: bool | None = None,
-                        mesh=None) -> tuple[AccumState, jax.Array]:
+                        mesh=None, refine=None) -> tuple[AccumState, jax.Array]:
     """Adaptive growth on the DOUBLING schedule: draw B slabs, fold them in
     with ONE data pass (``accum_grow_batched``), check the estimator, B ← 2B
     — O(log m_final) passes over K (or X) instead of O(m_final).
@@ -547,13 +606,15 @@ def accum_grow_doubling(K: jax.Array, state: AccumState, *, tol: float,
     a converged state pays nothing for the remaining phases.  The estimator
     runs once per BATCH (its probe/holdout contractions read the C the same
     pass just produced), not once per slab.  Returns ``(state, passes)``
-    with ``passes`` the number of batches actually applied."""
+    with ``passes`` the number of batches actually applied.  ``refine`` is
+    the optional per-phase probability refresh (``make_leverage_refine``),
+    forwarded to the shared ladder."""
     if mesh is not None:
         from repro.core import distributed as D
 
         return D.sharded_accum_grow_doubling(
             K, state, mesh, tol=tol, estimator=estimator,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, refine=refine)
     if use_kernel is None:
         use_kernel = default_use_kernel()
 
@@ -561,7 +622,8 @@ def accum_grow_doubling(K: jax.Array, state: AccumState, *, tol: float,
         return accum_grow_batched(K, s, B, use_kernel=use_kernel,
                                   donate=False)
 
-    return doubling_ladder(state, state.m_max, tol, apply_batch, estimator)
+    return doubling_ladder(state, state.m_max, tol, apply_batch, estimator,
+                           refine=refine)
 
 
 def accum_grow_adaptive(K: jax.Array, state: AccumState, *, tol: float,
@@ -612,6 +674,8 @@ def grow_sketch_both(
     tol: float | None = None, probs: jax.Array | None = None,
     signed: bool = True, estimator=None, check_every: int = 1,
     use_kernel: bool | None = None, mesh=None, schedule: str = "doubling",
+    scheme: str = "uniform", scheme_lam: float | None = None,
+    scheme_mix: float = 0.1,
 ) -> tuple[AccumSketch, jax.Array, jax.Array, dict]:
     """One-call driver: grow a sketch on K — a precomputed matrix OR a
     matrix-free ``KernelOperator`` — until the error target is met (or to
@@ -637,31 +701,66 @@ def grow_sketch_both(
     ``schedule="unit"`` for the one-slab-per-pass while_loop (there
     ``check_every`` amortizes the estimator).
 
+    ``scheme`` selects the sampling scheme: ``"uniform"`` (default),
+    ``"poisson"`` (fixed Horvitz–Thompson draws, π from ``probs`` or
+    uniform), ``"leverage"`` — start from ``probs`` (or uniform), and after
+    every executed batch re-estimate ridge-leverage probabilities FROM THE
+    SKETCH ITSELF (``schemes.state_leverage_probs`` at ridge level
+    ``scheme_lam``, uniform-mixed by ``scheme_mix``) and redraw the
+    not-yet-accumulated slabs from them.  Leverage requires the doubling
+    schedule (refinement happens between batches; a unit-step refresh would
+    re-randomize every slab).  ``scheme_lam`` defaults to 1e-3; the KRR
+    adaptive drivers forward their own λ.
+
     ``mesh`` (operator only) runs the whole growth data-parallel: identical
     index/holdout/probe draws (the RNG happens replicated, before anything is
     sharded), per-shard slab kernel evals, psum reductions."""
+    from repro.core.schemes import validate_scheme
+
+    validate_scheme(scheme)
+    if scheme == "leverage" and schedule != "doubling":
+        raise ValueError("scheme='leverage' refines between batches and "
+                         "needs schedule='doubling'")
     if mesh is not None:
         from repro.core import distributed as D
 
         return D.sharded_grow_sketch_both(
             key, K, d, mesh, m_max=m_max, tol=tol, probs=probs, signed=signed,
             estimator=estimator, check_every=check_every,
-            use_kernel=use_kernel, schedule=schedule)
+            use_kernel=use_kernel, schedule=schedule, scheme=scheme,
+            scheme_lam=scheme_lam, scheme_mix=scheme_mix)
     n = K.shape[0]
-    state = accum_init(key, n, d, m_max, probs, signed=signed)
+    state = accum_init(key, n, d, m_max, probs, signed=signed, scheme=scheme)
+    refine = None
+    if scheme == "leverage":
+        refine = make_leverage_refine(
+            key, lam=1e-3 if scheme_lam is None else scheme_lam,
+            mix=scheme_mix, signed=signed)
     passes = None
     if tol is None:
-        # fixed-size growth is ONE batch: t=0 makes the survivor rescale 0
-        # and the m_max-slab block IS the one-shot sketch — a single data
-        # pass where the unit loop paid m_max
-        state = accum_grow_batched(K, state, m_max, use_kernel=use_kernel)
-        passes = jnp.ones((), jnp.int32)
+        if refine is None:
+            # fixed-size growth is ONE batch: t=0 makes the survivor rescale 0
+            # and the m_max-slab block IS the one-shot sketch — a single data
+            # pass where the unit loop paid m_max
+            state = accum_grow_batched(K, state, m_max, use_kernel=use_kernel)
+            passes = jnp.ones((), jnp.int32)
+        else:
+            # leverage at fixed size still walks the doubling ladder so the
+            # probabilities refine between batches — O(log m) passes
+            sched = doubling_schedule(0, m_max)
+            for i, B in enumerate(sched):
+                state = accum_grow_batched(K, state, B, use_kernel=use_kernel,
+                                           donate=False)
+                if i < len(sched) - 1:
+                    state = refine(state, i)
+            passes = jnp.full((), len(sched), jnp.int32)
     else:
         if estimator is None:
             estimator = make_holdout_estimator(jax.random.fold_in(key, 0x5E1D), K)
         if schedule == "doubling":
             state, passes = accum_grow_doubling(
-                K, state, tol=tol, estimator=estimator, use_kernel=use_kernel)
+                K, state, tol=tol, estimator=estimator, use_kernel=use_kernel,
+                refine=refine)
         else:
             state = accum_grow_adaptive(K, state, tol=tol, estimator=estimator,
                                         check_every=check_every,

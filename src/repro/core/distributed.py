@@ -466,6 +466,9 @@ def sharded_accum_grow_batched(K, state: AccumState, B: int, mesh, *,
 
 def sharded_accum_grow(K, state: AccumState, steps: int, mesh, *,
                        use_kernel: bool | None = None) -> AccumState:
+    """``apply.accum_grow`` on a row-sharded operator: ``steps`` sequential
+    slab updates, each a mapped sweep per shard (one pad/unpad around the
+    whole loop)."""
     mesh = resolve_mesh(mesh)
     op = _operator_required(K)
     if use_kernel is None:
@@ -480,13 +483,15 @@ def sharded_accum_grow(K, state: AccumState, steps: int, mesh, *,
 
 def sharded_accum_grow_doubling(
     K, state: AccumState, mesh, *, tol: float, estimator,
-    use_kernel: bool | None = None,
+    use_kernel: bool | None = None, refine=None,
 ) -> tuple[AccumState, jax.Array]:
     """The doubling schedule on the sharded engine: the SHARED
     ``apply.doubling_ladder`` driver (so the stopping decisions — hence the
     chosen m — cannot drift from the single-device engine run with the same
     draws and a matching estimator), with each batch ONE mapped sweep over
-    the shards.  Returns ``(state, passes)``."""
+    the shards.  ``refine`` is the optional per-phase probability refresh
+    (``apply.make_leverage_refine`` — it reads C through driver-level
+    gathers, so the padded rows never enter).  Returns ``(state, passes)``."""
     mesh = resolve_mesh(mesh)
     op = _operator_required(K)
     if use_kernel is None:
@@ -497,7 +502,7 @@ def sharded_accum_grow_doubling(
         return _sharded_batched(opp, s, B, mesh, use_kernel, op.n)
 
     state, passes = A.doubling_ladder(st, st.m_max, tol, apply_batch,
-                                      estimator)
+                                      estimator, refine=refine)
     return _unpad_state(state, op.n), passes
 
 
@@ -591,20 +596,52 @@ def sharded_grow_sketch_both(
     tol: float | None = None, probs: jax.Array | None = None,
     signed: bool = True, estimator=None, check_every: int = 1,
     use_kernel: bool | None = None, schedule: str = "doubling",
+    scheme: str = "uniform", scheme_lam: float | None = None,
+    scheme_mix: float = 0.1,
 ):
     """The mesh branch of ``apply.grow_sketch_both``: identical RNG (the
     pre-draw happens replicated, before anything is sharded), sharded growth,
     same return contract (``schedule="doubling"`` by default — batched
-    rank-B passes, ``info["passes"]`` counts them)."""
+    rank-B passes, ``info["passes"]`` counts them).
+
+    ``scheme`` matches the single-device driver bitwise: the pre-draw and
+    every leverage probability refresh run replicated at the driver level
+    (``apply.make_leverage_refine`` built from the SAME key, reading C
+    through driver-level gathers), so the index/sign draws are identical to
+    the unsharded run."""
+    from repro.core.schemes import validate_scheme
+
+    validate_scheme(scheme)
+    if scheme == "leverage" and schedule != "doubling":
+        raise ValueError("scheme='leverage' refines between batches and "
+                         "needs schedule='doubling'")
     mesh = resolve_mesh(mesh)
     op = _operator_required(K)
-    state = A.accum_init(key, op.n, d, m_max, probs, signed=signed)
+    state = A.accum_init(key, op.n, d, m_max, probs, signed=signed,
+                         scheme=scheme)
+    refine = None
+    if scheme == "leverage":
+        refine = A.make_leverage_refine(
+            key, lam=1e-3 if scheme_lam is None else scheme_lam,
+            mix=scheme_mix, signed=signed)
     passes = None
     if tol is None:
-        # one batched mapped sweep, as in the single-device driver
-        state = sharded_accum_grow_batched(op, state, m_max, mesh,
-                                           use_kernel=use_kernel)
-        passes = jnp.ones((), jnp.int32)
+        if refine is None:
+            # one batched mapped sweep, as in the single-device driver
+            state = sharded_accum_grow_batched(op, state, m_max, mesh,
+                                               use_kernel=use_kernel)
+            passes = jnp.ones((), jnp.int32)
+        else:
+            # leverage at fixed size walks the doubling ladder with the
+            # refresh between batches — same phases/keys as the single-device
+            # driver, so the draws stay identical
+            sched = A.doubling_schedule(0, m_max)
+            for i, B in enumerate(sched):
+                state = sharded_accum_grow_batched(op, state, B, mesh,
+                                                   use_kernel=use_kernel)
+                if i < len(sched) - 1:
+                    state = refine(state, i)
+            passes = jnp.full((), len(sched), jnp.int32)
     else:
         if estimator is None:
             estimator = make_sharded_holdout_estimator(
@@ -612,7 +649,7 @@ def sharded_grow_sketch_both(
         if schedule == "doubling":
             state, passes = sharded_accum_grow_doubling(
                 op, state, mesh, tol=tol, estimator=estimator,
-                use_kernel=use_kernel)
+                use_kernel=use_kernel, refine=refine)
         else:
             state = sharded_accum_grow_adaptive(
                 op, state, mesh, tol=tol, estimator=estimator,

@@ -137,23 +137,28 @@ class KernelOperator:
     nu: float = 1.5              # matern only
 
     def tree_flatten(self):
+        """Pytree leaf = X; kernel name/bandwidth/nu are static aux."""
         return (self.X,), (self.kernel, self.bandwidth, self.nu)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Inverse of ``tree_flatten`` (jax pytree protocol)."""
         return cls(X=children[0], kernel=aux[0], bandwidth=aux[1], nu=aux[2])
 
     # -- array-like surface (what apply/krr/spectral touch on a dense K) ------
     @property
     def n(self) -> int:
+        """Number of dataset rows (= both dims of the represented K)."""
         return self.X.shape[0]
 
     @property
     def shape(self) -> tuple[int, int]:
+        """(n, n) — the shape of the NEVER-materialized Gram matrix."""
         return (self.n, self.n)
 
     @property
     def dtype(self):
+        """dtype of the represented K (= the dataset's dtype)."""
         return self.X.dtype
 
     @property

@@ -25,6 +25,8 @@ def gaussian_kernel(A, B, bandwidth: float = 1.0):
 
 
 def laplacian_kernel(A, B, bandwidth: float = 1.0):
+    """k(a, b) = exp(−‖a − b‖ / bandwidth) — the L2 Laplacian (exponential)
+    kernel, (a, p) × (b, p) → (a, b)."""
     d = jnp.sqrt(_sqdist(A, B) + 1e-30)
     return jnp.exp(-d / bandwidth)
 

@@ -59,6 +59,8 @@ def krr_exact_fit(K: jax.Array, y: jax.Array, lam: float) -> jax.Array:
 
 
 def krr_exact_fitted(K: jax.Array, y: jax.Array, lam: float) -> jax.Array:
+    """Fitted values f̂ = K α of the exact KRR solve — the O(n³) reference
+    every sketched error is measured against."""
     return K @ krr_exact_fit(K, y, lam)
 
 
@@ -93,17 +95,22 @@ class SketchedKRR:
     op: "KernelOperator | None" = None  # matrix-free operator (predict routing)
 
     def tree_flatten(self):
+        """Pytree leaves = arrays/submodels; the kernel callable is aux."""
         children = (self.theta, self.sk, self.S_dense, self.X_train,
                     self.fitted, self.info, self.op)
         return children, (self.kernel_fn,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Inverse of ``tree_flatten`` (jax pytree protocol)."""
         theta, sk, S_dense, X_train, fitted, info, op = children
         return cls(theta=theta, sk=sk, S_dense=S_dense, X_train=X_train,
                    kernel_fn=aux[0], fitted=fitted, info=info, op=op)
 
     def predict(self, X_test: jax.Array, *, mesh=None) -> jax.Array:
+        """Out-of-sample prediction K(X_test, landmarks) θ — O(n_test·m·d)
+        kernel evaluations, never an n_test × n matrix.  ``mesh`` shards the
+        test rows (operator-fitted models only)."""
         if self.op is not None and self.sk is not None:
             return self.op.cross_cols(X_test, self.sk, mesh=mesh) @ self.theta
         if mesh is not None:
@@ -315,6 +322,7 @@ def krr_sketched_fit_adaptive(
     estimator=None, check_every: int = 1,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
     use_kernel: bool | None = None, mesh=None, schedule: str = "doubling",
+    scheme: str = "uniform", scheme_lam: float | None = None,
 ) -> SketchedKRR:
     """Sketched KRR with the sketch size chosen by the progressive engine:
     grow m one slab at a time (O(n·d) incremental (C, W) updates) until the
@@ -329,12 +337,20 @@ def krr_sketched_fit_adaptive(
     ``K`` may be dense or a ``KernelOperator`` (the engine then grows
     matrix-free: each batch is ONE kernel-eval column-block sweep), and
     ``mesh`` (operator only) runs the whole growth data-parallel with
-    identical index draws."""
+    identical index draws.
+
+    ``scheme`` selects the sampling scheme (``"uniform"`` / ``"leverage"`` /
+    ``"poisson"``).  ``scheme_lam`` is the ridge level at which the leverage
+    refinement estimates ridge-leverage scores; it is deliberately decoupled
+    from the fit's λ (default: the engine's 1e-3) — scores estimated at a
+    coarse ridge whose statistical dimension is O(d) resolve exactly the
+    directions a d-column sketch can capture, whereas a tiny fit λ flattens
+    the score profile toward rank indicators."""
     op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
         check_every=check_every, use_kernel=use_kernel, mesh=mesh,
-        schedule=schedule)
+        schedule=schedule, scheme=scheme, scheme_lam=scheme_lam)
     theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted,
@@ -348,17 +364,21 @@ def krr_sketched_fit_pcg_adaptive(
     probs: jax.Array | None = None, estimator=None, check_every: int = 1,
     X_train: jax.Array | None = None, kernel_fn: Callable | None = None,
     use_kernel: bool | None = None, mesh=None, schedule: str = "doubling",
+    scheme: str = "uniform", scheme_lam: float | None = None,
 ) -> SketchedKRR:
     """Adaptive-m Falkon-style PCG: the progressive engine grows (C, W) to the
     error target (doubling schedule by default — O(log m) data passes), then
     CG reuses the incremental pair directly — the d×d preconditioner never
     changes size while m grows (paper §3.3).  ``K`` may be dense or a
-    matrix-free ``KernelOperator`` (required for ``mesh``)."""
+    matrix-free ``KernelOperator`` (required for ``mesh``).  ``scheme``
+    selects the sampling scheme; ``scheme_lam`` the leverage-estimation ridge
+    (default: the engine's 1e-3, decoupled from the fit's λ — see
+    ``krr_sketched_fit_adaptive``)."""
     op = A._operator(K)
     sk, C, W, info = A.grow_sketch_both(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
         check_every=check_every, use_kernel=use_kernel, mesh=mesh,
-        schedule=schedule)
+        schedule=schedule, scheme=scheme, scheme_lam=scheme_lam)
     theta = _pcg_solve(C, W, y, lam, iters, mesh=mesh)
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, C @ theta,

@@ -18,6 +18,8 @@ from repro.core.sketch import AccumSketch
 
 
 class KSatResult(NamedTuple):
+    """Outcome of the K-satisfiability certificate (see ``ksat_check``)."""
+
     top_deviation: jax.Array     # ‖U₁ᵀSSᵀU₁ − I‖_op
     tail_norm: jax.Array         # ‖SᵀU₂Σ₂^{1/2}‖_op
     tail_bound: jax.Array        # c·√δ reference (c=1)
@@ -28,6 +30,11 @@ def ksat_check(
     K: jax.Array, S_or_sketch, delta: float,
     spec: KrrSpectrum | None = None, c: float = 2.0,
 ) -> KSatResult:
+    """K-satisfiability certificate for a drawn sketch: the top d_δ
+    eigendirections must be near-isometrically preserved
+    (‖U₁ᵀS SᵀU₁ − I‖ ≤ 1/2) and the spectral tail must stay small
+    (‖SᵀU₂Σ₂^{1/2}‖ ≤ c√δ).  A sketch that passes supports the paper's
+    downstream KRR/spectral error bounds at level δ."""
     spec = spec or spectrum(K)
     dd = max(d_delta(spec, delta), 1)
     if isinstance(S_or_sketch, AccumSketch):

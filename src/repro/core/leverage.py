@@ -19,11 +19,15 @@ import jax.numpy as jnp
 
 
 class KrrSpectrum(NamedTuple):
+    """Eigendecomposition of K/n, shared by every oracle in this module."""
+
     eigvals: jax.Array   # σ_i of K/n, descending (n,)
     eigvecs: jax.Array   # U (n, n), columns matching eigvals
 
 
 def spectrum(K: jax.Array) -> KrrSpectrum:
+    """Full eigh of K/n (clipped to PSD, descending) — the O(n³) step every
+    exact oracle below reuses via the ``spec=`` argument."""
     n = K.shape[0]
     w, U = jnp.linalg.eigh(K / n)
     order = jnp.argsort(-w)
@@ -38,6 +42,8 @@ def leverage_scores(K: jax.Array, lam: float, spec: KrrSpectrum | None = None) -
 
 
 def statistical_dimension(K: jax.Array, lam: float, spec: KrrSpectrum | None = None) -> jax.Array:
+    """d_stat(λ) = Σ_i σ_i/(σ_i + λ) = Σ_i ℓ_i — the effective degrees of
+    freedom of ridge regression at level λ (total leverage mass)."""
     spec = spec or spectrum(K)
     return jnp.sum(spec.eigvals / (spec.eigvals + lam))
 

@@ -1,0 +1,253 @@
+"""Sampling schemes for accumulation sketches — the ``scheme=`` knob.
+
+The paper's premise is that a *suboptimal* sampling distribution P forces a
+larger accumulation count m, and that growing m is how accumulation rescues
+cheap schemes.  This module supplies the schemes themselves:
+
+  * ``"uniform"``  — p_i = 1/n (the default everywhere; classical Nyström
+    at m=1).  Nothing here runs for it; it is listed for completeness.
+  * ``"leverage"`` — ridge-leverage-score probabilities
+    ℓ_i(λ) = (K (K + nλI)⁻¹)_ii, estimated MATRIX-FREE from the current
+    sketch itself: the Nyström lift of (C, W) (``spectral.nystrom_eigh``)
+    gives K̂ = P Σ² Pᵀ, and ℓ̂_i = Σ_j P_ij² σ²_j/(σ²_j + nλ) — O(n·d²), no
+    n×n matrix.  The progressive engine refines the probability vector as m
+    grows (``refresh_tail`` redraws the not-yet-accumulated slabs from the
+    new probs).  ``core.leverage`` stays as the O(n³) exact oracle the tests
+    compare against.
+  * ``"poisson"``  — each row enters a slab INDEPENDENTLY with probability
+    π_i = min(1, d·p_i) (no replacement, variable count), padded to the
+    fixed column budget d.  The stored per-row probability is π_i/d, so the
+    universal combination coefficient r/√(d·m·p) equals r/√(m·π) — the
+    Horvitz–Thompson normalization — and E[SSᵀ] = I holds exactly
+    (``poisson_pieces`` folds the overflow correction into the signs).
+
+Every engine/driver entry point (``make_accum_sketch``, ``grow_sketch_both``,
+``krr_sketched_fit_adaptive``, ``spectral_cluster``, the sharded twins)
+accepts ``scheme=`` and threads it here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SCHEMES = ("uniform", "leverage", "poisson")
+
+# floor for Poisson inclusion probabilities: keeps π/d strictly positive so
+# padding columns (sign 0) never divide 0/√0 into NaN in the coef formula
+_PI_FLOOR = 1e-9
+
+
+def validate_scheme(scheme: str) -> str:
+    """Check ``scheme`` is one of ``SCHEMES`` and return it.
+
+    Args:
+        scheme: candidate scheme name.
+
+    Returns:
+        The validated name (unchanged).
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; expected one of {SCHEMES}")
+    return scheme
+
+
+# --------------------------------------------------------------------------- #
+# Poisson sampling
+# --------------------------------------------------------------------------- #
+
+def poisson_inclusion(probs: jax.Array | None, n: int, d: int,
+                      dtype=jnp.float32) -> jax.Array:
+    """Per-row inclusion probabilities π_i = min(1, d·p_i) for Poisson slabs.
+
+    Args:
+        probs: base sampling distribution (n,), unnormalized accepted;
+            ``None`` means uniform.
+        n: ambient dimension.
+        d: sketch column budget (expected slab size).
+        dtype: dtype of the returned vector.
+
+    Returns:
+        (n,) inclusion probabilities in [floor, 1].
+    """
+    from repro.core.sketch import _normalize_probs
+
+    base = _normalize_probs(probs, n, dtype)
+    return jnp.clip(d * base, _PI_FLOOR, 1.0)
+
+
+def poisson_pieces(key: jax.Array, pi: jax.Array, m: int, d: int, *,
+                   dtype=jnp.float32, signed: bool = True):
+    """Draw ``m`` Poisson sub-sampling slabs with inclusion probabilities π.
+
+    Row i enters each slab independently with probability π_i.  The variable
+    per-slab count N is padded/truncated to the fixed column budget ``d``:
+    when N > d a uniformly-random size-d subset of the included rows is kept
+    (the order statistic of u/π, which is U(0,1) conditional on inclusion)
+    and the Horvitz–Thompson correction √(N/d) is folded into the signs, so
+    the slab stays exactly unbiased; when N < d the trailing columns carry
+    sign 0 and contribute nothing.
+
+    Args:
+        key: PRNG key.
+        pi: (n,) inclusion probabilities (see ``poisson_inclusion``).
+        m: number of slabs.
+        d: column budget per slab.
+        dtype: dtype for the signs.
+        signed: multiply kept entries by i.i.d. Rademacher signs.
+
+    Returns:
+        ``(indices, signs)`` of shape (m, d): ``signs`` ∈ {0, ±√(N/kept)}
+        — zero marks padding.  With the per-row probability stored as π/d,
+        the universal coefficient r/√(d·m·p) equals the Horvitz–Thompson
+        r/√(m·π).
+    """
+    n = pi.shape[0]
+    ku, ks = jax.random.split(key)
+    u = jax.random.uniform(ku, (m, n))
+    inc = u < pi[None, :]
+    # u/π | inclusion is U(0,1): sorting it picks a uniformly-random subset
+    # of the included rows when the slab overflows the column budget
+    score = jnp.where(inc, u / pi[None, :], jnp.inf)
+    order = jnp.argsort(score, axis=1)
+    indices = order[:, :d].astype(jnp.int32)
+    count = jnp.sum(inc, axis=1)                        # N per slab
+    kept = jnp.minimum(count, d)
+    valid = jnp.arange(d)[None, :] < kept[:, None]
+    scale = jnp.sqrt(jnp.maximum(count, 1) / jnp.maximum(kept, 1)).astype(dtype)
+    if signed:
+        sgn = jax.random.rademacher(ks, (m, d), dtype=dtype)
+    else:
+        sgn = jnp.ones((m, d), dtype=dtype)
+    signs = jnp.where(valid, sgn * scale[:, None], 0.0).astype(dtype)
+    return indices, signs
+
+
+# --------------------------------------------------------------------------- #
+# Sketch-estimated ridge leverage scores
+# --------------------------------------------------------------------------- #
+
+def sketch_leverage_scores(C: jax.Array, W: jax.Array, lam: float, *,
+                           eps: float = 1e-7) -> jax.Array:
+    """Ridge leverage scores of the SKETCHED operator K̂ = C W⁺ Cᵀ — O(n·d²).
+
+    The Nyström lift (``spectral.nystrom_eigh``) gives K̂ = P Σ² Pᵀ with
+    orthonormal P, so the plug-in estimate of
+    ℓ_i(λ) = (K (K + nλI)⁻¹)_ii is
+
+        ℓ̂_i = Σ_j P_ij² · σ²_j / (σ²_j + nλ),
+
+    matching ``leverage.leverage_scores``'s K/n eigenvalue convention
+    (σ²_j/(σ²_j+nλ) = μ_j/(μ_j+λ) for μ = σ²/n).  Estimated matrix-free
+    from the current sketch itself: no n×n matrix is ever formed.
+
+    Args:
+        C: (n, d) sketch product K S.
+        W: (d, d) small matrix Sᵀ K S.
+        lam: ridge level λ (same convention as ``leverage.leverage_scores``).
+        eps: relative eigenvalue cutoff for the W pseudo-inverse.
+
+    Returns:
+        (n,) estimated leverage scores in [0, 1).
+    """
+    from repro.core.spectral import nystrom_eigh
+
+    n = C.shape[0]
+    evals, evecs = nystrom_eigh(C.astype(jnp.float32), W.astype(jnp.float32),
+                                eps=eps)
+    ratio = evals / (evals + n * lam)
+    return jnp.einsum("nk,k->n", evecs * evecs, ratio)
+
+
+def sketch_leverage_probs(C: jax.Array, W: jax.Array, lam: float, *,
+                          mix: float = 0.1, eps: float = 1e-7) -> jax.Array:
+    """Sampling probabilities from sketch-estimated leverage scores.
+
+    Mixes the normalized scores with the uniform distribution,
+    p = (1−mix)·ℓ̂/Σℓ̂ + mix/n — the uniform floor bounds the combination
+    coefficients (variance control) and keeps every p_i strictly positive.
+
+    Args:
+        C: (n, d) sketch product K S.
+        W: (d, d) small matrix Sᵀ K S.
+        lam: ridge level λ.
+        mix: uniform mixing weight in [0, 1].
+        eps: relative eigenvalue cutoff for the W pseudo-inverse.
+
+    Returns:
+        (n,) normalized sampling probabilities, each ≥ mix/n.
+    """
+    scores = sketch_leverage_scores(C, W, lam, eps=eps)
+    n = scores.shape[0]
+    total = jnp.maximum(jnp.sum(scores), 1e-30)
+    return (1.0 - mix) * scores / total + mix / n
+
+
+def state_leverage_probs(state, lam: float, *, mix: float = 0.1,
+                         eps: float = 1e-7) -> jax.Array:
+    """Refined sampling probabilities from a live engine state — trace-safe.
+
+    Reads the state's running C and recomputes W = SᵀC from C row gathers at
+    the driver level (instead of using ``state.W``), so the single-device and
+    sharded engines — whose W accumulations reduce in different orders — feed
+    the SAME arithmetic into the probability refresh and the redrawn slabs
+    stay bitwise-identical across them.
+
+    Args:
+        state: ``AccumState`` with at least one slab accumulated.
+        lam: ridge level λ for the leverage scores.
+        mix: uniform mixing weight.
+        eps: relative eigenvalue cutoff for the W pseudo-inverse.
+
+    Returns:
+        (n,) refined sampling probabilities (n = ``state.n``; sharded
+        padding rows of C are excluded).
+    """
+    from repro.core import apply as A
+
+    sk = state.masked_sketch()
+    C = state.C[: state.n].astype(jnp.float32)   # engine states may pad C
+    W = A.sketch_left(sk, C)
+    W = 0.5 * (W + W.T)
+    return sketch_leverage_probs(C, W, lam, mix=mix, eps=eps)
+
+
+def refresh_tail(state, key: jax.Array, probs_new: jax.Array, *,
+                 signed: bool = True):
+    """Redraw the NOT-yet-accumulated slabs from a refined distribution.
+
+    Slabs < m keep their indices/signs and their at-draw probabilities
+    (``state.pdraw``) — their normalization is already folded into (C, W) —
+    while slabs ≥ m are redrawn with replacement from ``probs_new`` and
+    record the new probabilities.  Trace-safe (pure ``where`` masking on the
+    static (m_max, d) buffers), so it composes with the ``lax.cond`` phases
+    of the doubling ladder.
+
+    Args:
+        state: ``AccumState`` to refresh.
+        key: PRNG key for the redraw (fold in the phase index upstream).
+        probs_new: (n,) refined sampling distribution (normalized).
+        signed: draw Rademacher signs for the redrawn slabs.
+
+    Returns:
+        A new ``AccumState`` with the tail redrawn and ``probs`` updated.
+    """
+    kidx, ksgn = jax.random.split(key)
+    m_max, d = state.indices.shape
+    idx_f = jax.random.choice(kidx, state.n, shape=(m_max, d), replace=True,
+                              p=probs_new).astype(jnp.int32)
+    if signed:
+        sgn_f = jax.random.rademacher(ksgn, (m_max, d),
+                                      dtype=state.signs.dtype)
+    else:
+        sgn_f = jnp.ones((m_max, d), dtype=state.signs.dtype)
+    tail = jnp.arange(m_max)[:, None] >= state.m
+    p_f = jnp.take(probs_new, idx_f, axis=0).astype(state.pdraw.dtype)
+    return dataclasses.replace(
+        state,
+        indices=jnp.where(tail, idx_f, state.indices),
+        signs=jnp.where(tail, sgn_f, state.signs),
+        probs=probs_new.astype(state.probs.dtype),
+        pdraw=jnp.where(tail, p_f, state.pdraw),
+    )

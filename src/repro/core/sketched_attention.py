@@ -124,6 +124,7 @@ class SketchCache(NamedTuple):
 
 
 def init_sketch_cache(batch, kv_heads, d_slots, head_dim, dtype=jnp.float32) -> SketchCache:
+    """Zero-initialized decode-time landmark cache (K-slots, V-slots, counts)."""
     z = jnp.zeros((batch, kv_heads, d_slots, head_dim), dtype)
     return SketchCache(z, z, jnp.zeros((batch, kv_heads, d_slots), dtype))
 

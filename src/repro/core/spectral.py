@@ -176,6 +176,7 @@ def spectral_cluster(
     probs: jax.Array | None = None, normalized: bool = True,
     use_kernel: bool | None = None, kmeans_restarts: int = 4,
     kmeans_iters: int = 25, mesh=None, schedule: str = "doubling",
+    scheme: str = "uniform",
 ) -> SpectralResult:
     """Sketched spectral clustering of the affinity matrix K.
 
@@ -196,17 +197,23 @@ def spectral_cluster(
     data-parallel over a ``("data",)`` device mesh with identical sketch
     draws; the O(n·d²) eigenvector lift and k-means run on the row-sharded
     (n, d) pair unchanged.
+
+    ``scheme`` selects the sampling scheme.  ``"poisson"`` works on both
+    paths; ``"leverage"`` routes the fixed-m path through the progressive
+    engine too (tol=None) so the probabilities can refine from the sketch
+    itself between doubling batches.
     """
     ksk, kkm = jax.random.split(key)
-    if tol is not None:
-        if m is not None:
-            raise ValueError("pass either m= or tol=, not both")
+    if tol is not None and m is not None:
+        raise ValueError("pass either m= or tol=, not both")
+    if tol is not None or scheme == "leverage":
         sk, C, W, info = A.grow_sketch_both(
-            ksk, K, d, m_max=m_max, tol=tol, probs=probs,
-            use_kernel=use_kernel, mesh=mesh, schedule=schedule)
+            ksk, K, d, m_max=m_max if m is None else m, tol=tol, probs=probs,
+            use_kernel=use_kernel, mesh=mesh, schedule=schedule,
+            scheme=scheme)
     else:
         sk = make_accum_sketch(ksk, K.shape[0], d, m_max if m is None else m,
-                               probs)
+                               probs, scheme=scheme)
         C, W = A.sketch_both(K, sk, use_kernel=use_kernel, mesh=mesh)
         info = {"m": sk.m, "m_max": m_max, "err": float("nan")}
     eigvals, U = sketched_spectral_embedding(

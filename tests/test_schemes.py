@@ -1,0 +1,248 @@
+"""Sampling-scheme zoo: unbiasedness, Poisson design, leverage estimation.
+
+Covers the ``scheme=`` knob end to end: per-scheme E[S Sᵀ] = I (the identity
+every estimator rests on), the Poisson/Horvitz–Thompson normalization and
+overflow correction, convergence of the sketch-estimated ridge-leverage
+probabilities to the exact O(n³) oracle, and draw parity across the dense,
+matrix-free, and (on the 8-device leg) sharded engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import apply as A
+from repro.core.kernel_op import KernelOperator
+from repro.core.kernels_math import gaussian_kernel
+from repro.core.leverage import leverage_probs
+from repro.core.schemes import (
+    SCHEMES,
+    poisson_inclusion,
+    state_leverage_probs,
+    validate_scheme,
+)
+from repro.core.sketch import (
+    make_accum_sketch,
+    make_accum_sketch_jit,
+    make_nystrom_sketch,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+needs_8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the CI acceptance leg sets it)")
+
+
+def _nonuniform_probs(n):
+    """A fixed, deliberately lopsided weight vector (unnormalized)."""
+    return jnp.arange(1, n + 1, dtype=jnp.float32) ** 1.5
+
+
+# --------------------------------------------------------------------------- #
+# E[S Sᵀ] = I for every scheme
+# --------------------------------------------------------------------------- #
+
+def _check_scheme_unbiasedness(scheme, n, d, m, reps=300):
+    """Monte-Carlo E[S Sᵀ] ≈ I at fixed seeds, under non-uniform weights."""
+    probs = _nonuniform_probs(n)
+    acc = np.zeros((n, n))
+    for i in range(reps):
+        key = jax.random.fold_in(jax.random.fold_in(KEY, 97 * n + d), i)
+        S = np.asarray(
+            make_accum_sketch(key, n, d, m, probs, scheme=scheme).dense())
+        acc += S @ S.T
+    acc /= reps
+    diag = np.diag(acc)
+    off = acc - np.diag(diag)
+    assert abs(diag.mean() - 1.0) < 0.25, (scheme, diag.mean())
+    assert abs(off.mean()) < 0.05, (scheme, off.mean())
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_unbiasedness_pinned(scheme):
+    _check_scheme_unbiasedness(scheme, 16, 4, 2)
+    _check_scheme_unbiasedness(scheme, 24, 6, 3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 40), d=st.integers(2, 8), m=st.integers(1, 4),
+       scheme=st.sampled_from(SCHEMES))
+def test_unbiasedness_property(n, d, m, scheme):
+    d = min(d, n)
+    _check_scheme_unbiasedness(scheme, n, d, m, reps=150)
+
+
+def test_validate_scheme():
+    assert validate_scheme("poisson") == "poisson"
+    with pytest.raises(ValueError, match="unknown scheme"):
+        validate_scheme("importance")
+
+
+# --------------------------------------------------------------------------- #
+# Poisson design: inclusion probabilities, HT normalization, overflow
+# --------------------------------------------------------------------------- #
+
+def test_poisson_expected_column_count():
+    """E[#included] = Σ π_i (= d when nothing clips); the realized kept count
+    (non-zero signs per slab) matches in Monte-Carlo mean, minus the mass
+    lost to the overflow truncation at d."""
+    n, d, m = 64, 4, 2
+    pi = np.asarray(poisson_inclusion(None, n, d, jnp.float32))
+    np.testing.assert_allclose(pi.sum(), d, rtol=1e-6)
+    counts = []
+    for i in range(300):
+        sk = make_accum_sketch(jax.random.fold_in(KEY, i), n, d, m,
+                               scheme="poisson")
+        counts.append(float((np.asarray(sk.signs) != 0).sum(axis=1).mean()))
+    # kept = min(N, d) with N ~ PoissonBinomial(π), E[N] = d → mean kept is
+    # slightly BELOW d (truncation) but well above d/2
+    assert d / 2 < np.mean(counts) <= d, np.mean(counts)
+
+
+def test_poisson_coef_normalization():
+    """The stored probs make the universal coef formula Horvitz–Thompson:
+    coef²·d·m·p̃ = N/kept on taken entries (exactly 1 when N ≤ d), constant
+    within a slab, with N = lhs·kept an integer; padding entries have sign 0
+    and contribute zero columns."""
+    n, d, m = 32, 4, 6
+    sk = make_accum_sketch(jax.random.PRNGKey(0), n, d, m, scheme="poisson")
+    signs = np.asarray(sk.signs)
+    p_taken = np.asarray(jnp.take(sk.probs, sk.indices))
+    lhs = np.asarray(sk.coef) ** 2 * d * m * p_taken
+    assert (np.abs(signs[signs != 0]) >= 1.0 - 1e-6).all()
+    saw_overflow = False
+    for t in range(m):
+        taken = signs[t] != 0
+        kept = int(taken.sum())
+        assert kept >= 1
+        row = lhs[t][taken]
+        np.testing.assert_allclose(row, row[0], rtol=1e-5)
+        N = row[0] * kept
+        np.testing.assert_allclose(N, round(float(N)), atol=1e-3)
+        assert row[0] >= 1.0 - 1e-5
+        saw_overflow |= row[0] > 1.0 + 1e-3
+    assert saw_overflow  # this seed includes an N > d slab (the HT √(N/kept))
+    # padding entries contribute nothing: their combination coefficient is 0
+    coef = np.asarray(sk.coef)
+    assert (signs == 0).any()           # the seed produces real padding
+    assert (coef[signs == 0] == 0).all()
+    assert np.isfinite(coef).all()
+
+
+def test_poisson_grow_matches_sketch_both():
+    """The progressive engine's accumulated (C, W) under scheme="poisson"
+    reproduces the direct sketch application of the final sketch."""
+    n, d, m = 96, 8, 4
+    X = jax.random.normal(jax.random.PRNGKey(2), (n, 2))
+    K = gaussian_kernel(X, X, 0.7)
+    sk, C, W, _ = A.grow_sketch_both(KEY, K, d, m_max=m, tol=None,
+                                     scheme="poisson")
+    C2, W2 = A.sketch_both(K, sk, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W2), atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# sketch-estimated leverage → exact oracle
+# --------------------------------------------------------------------------- #
+
+def test_sketch_leverage_converges_to_exact():
+    """TV(ℓ̂, ℓ) shrinks as the sketch grows — the matrix-free estimate
+    approaches the O(n³) oracle ``leverage.leverage_probs``."""
+    n, lam = 128, 1e-2
+    X = jax.random.normal(jax.random.PRNGKey(3), (n, 2))
+    K = gaussian_kernel(X, X, 0.8)
+    exact = np.asarray(leverage_probs(K, lam))
+    tvs = []
+    for d, m in [(8, 2), (16, 8), (32, 32)]:
+        state = A.accum_init(jax.random.PRNGKey(7), n, d, m)
+        state = A.accum_grow_batched(K, state, m, use_kernel=False)
+        est = np.asarray(state_leverage_probs(state, lam, mix=0.0))
+        np.testing.assert_allclose(est.sum(), 1.0, atol=1e-5)
+        assert (est >= 0).all()
+        tvs.append(0.5 * np.abs(est - exact).sum())
+    assert tvs[0] > tvs[1] > tvs[2], tvs
+    assert tvs[2] < 0.05, tvs
+
+
+def test_leverage_requires_probs_or_engine():
+    """scheme="leverage" has no closed-form draw: the one-shot constructors
+    demand explicit probs (the engine path estimates them instead)."""
+    with pytest.raises(ValueError, match="leverage"):
+        make_accum_sketch(KEY, 32, 4, 2, scheme="leverage")
+    with pytest.raises(ValueError, match="leverage"):
+        make_accum_sketch_jit(KEY, 32, 4, 2, scheme="leverage")
+    with pytest.raises(ValueError, match="doubling"):
+        A.grow_sketch_both(KEY, jnp.eye(32), 4, m_max=2, tol=None,
+                           scheme="leverage", schedule="unit")
+
+
+# --------------------------------------------------------------------------- #
+# scheme parity: dense ≡ matrix-free ≡ sharded
+# --------------------------------------------------------------------------- #
+
+def _parity_setup(n=96):
+    X = jax.random.normal(jax.random.PRNGKey(11), (n, 2))
+    K = gaussian_kernel(X, X, 0.6)
+    op = KernelOperator(X, "gaussian", bandwidth=0.6)
+    return K, op
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_scheme_parity_dense_vs_matfree(scheme):
+    """Same key, same scheme → bitwise-identical draws and matching (C, W)
+    whether the engine sweeps a dense K or a matrix-free operator."""
+    K, op = _parity_setup()
+    kw = dict(m_max=4, tol=None, scheme=scheme)
+    sk0, C0, W0, _ = A.grow_sketch_both(KEY, K, 8, **kw)
+    sk1, C1, W1, _ = A.grow_sketch_both(KEY, op, 8, use_kernel=False, **kw)
+    assert (np.asarray(sk0.indices) == np.asarray(sk1.indices)).all()
+    assert (np.asarray(sk0.signs) == np.asarray(sk1.signs)).all()
+    np.testing.assert_allclose(np.asarray(C0), np.asarray(C1), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(W0), np.asarray(W1), atol=2e-4)
+
+
+@needs_8
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_scheme_parity_sharded(scheme):
+    """The acceptance bit: sharded draws are BITWISE identical to the
+    single-device engine for every scheme (leverage includes the refinement
+    loop — probs re-estimated from driver-level gathers, same fold_in keys)."""
+    from repro.core import distributed as D
+    mesh = D.make_data_mesh(8)
+    K, op = _parity_setup(n=96)
+    kw = dict(m_max=4, tol=None, scheme=scheme)
+    sk0, C0, W0, _ = A.grow_sketch_both(KEY, op, 8, use_kernel=False, **kw)
+    sk1, C1, W1, _ = D.sharded_grow_sketch_both(KEY, op, 8, mesh=mesh, **kw)
+    assert (np.asarray(sk0.indices) == np.asarray(sk1.indices)).all()
+    assert (np.asarray(sk0.signs) == np.asarray(sk1.signs)).all()
+    np.testing.assert_allclose(np.asarray(C0), np.asarray(C1), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(W0), np.asarray(W1), rtol=1e-5,
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# constructor unification (the PR's ride-along bugfix pin)
+# --------------------------------------------------------------------------- #
+
+def test_nystrom_probs_normalization_matches_accum():
+    """make_nystrom_sketch delegates to make_accum_sketch: unnormalized /
+    float64 / list-typed weight vectors produce the IDENTICAL draw in both,
+    and the stored probs are normalized to sum 1 in float32."""
+    n, d = 40, 6
+    raw = [float(3 * i + 1) for i in range(n)]          # unnormalized list
+    sk_a = make_nystrom_sketch(KEY, n, d, jnp.asarray(raw, jnp.float64))
+    sk_b = make_accum_sketch(KEY, n, d, m=1,
+                             probs=jnp.asarray(raw, jnp.float32), signed=False)
+    assert (np.asarray(sk_a.indices) == np.asarray(sk_b.indices)).all()
+    np.testing.assert_allclose(np.asarray(sk_a.probs), np.asarray(sk_b.probs),
+                               rtol=1e-6)
+    assert sk_a.probs.dtype == jnp.float32
+    np.testing.assert_allclose(float(jnp.sum(sk_a.probs)), 1.0, atol=1e-5)
+    # scheme threads through the delegation unchanged
+    sk_p = make_nystrom_sketch(KEY, n, d, scheme="poisson")
+    assert sk_p.scheme == "poisson" and sk_p.m == 1
