@@ -9,7 +9,10 @@ cold/warm timings live in ``BENCH_grow.json``; the sharded weak/strong
 scaling table (per-device C ∝ 1/D) lives in ``BENCH_distributed.json`` (run
 that suite under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
 the sampling-scheme zoo's error-vs-m curves (uniform / leverage / poisson on
-the KRR anchor) live in ``BENCH_schemes.json``.
+the KRR anchor) live in ``BENCH_schemes.json``; the serving-layer numbers —
+batched-vs-sequential prefill at the 4k anchor plus exact-vs-sketched decode
+tokens/s and cache bytes across a 4k → 512k context ladder — live in
+``BENCH_attention.json``.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
@@ -17,7 +20,7 @@ the KRR anchor) live in ``BENCH_schemes.json``.
   PYTHONPATH=src python -m benchmarks.run grow       # refresh BENCH_grow.json
 
 ``--smoke`` runs suites that honor it (``kernels``, ``matfree``, ``grow``,
-``distributed``, ``schemes``) at tiny
+``distributed``, ``schemes``, ``attention``) at tiny
 shapes with a single rep — CI uses it to regenerate the JSONs on every PR
 without timing out; they are tagged ``"smoke": true`` so real trajectory
 numbers are never overwritten by CI artifacts.
@@ -28,7 +31,8 @@ import os
 import sys
 import traceback
 
-from benchmarks import amm_bench, distributed_bench, falkon_bench, fig1_toy
+from benchmarks import amm_bench, attention_bench, distributed_bench
+from benchmarks import falkon_bench, fig1_toy
 from benchmarks import fig2_approx_error, fig3_tradeoff, grow_bench
 from benchmarks import kernel_bench, matfree_bench, roofline, schemes_bench
 from benchmarks import train_bench
@@ -43,6 +47,7 @@ SUITES = {
     "matfree": matfree_bench.main,  # matrix-free operator: past the n² wall
     "grow": grow_bench.main,        # batched rank-B growth + autotune cache
     "schemes": schemes_bench.main,  # sampling-scheme zoo: error vs m
+    "attention": attention_bench.main,  # serving: prefill speedup + decode ladder
     "distributed": distributed_bench.main,  # sharded (C, W): weak/strong scaling
     "train": train_bench.main,      # end-to-end step throughput
     "roofline": roofline.main,      # dry-run roofline table

@@ -10,10 +10,17 @@ cache bytes + agreement of the generated continuations.
 This is the mechanism that makes the long_500k production shape feasible for
 full-attention architectures: a 500k-token exact cache for qwen1.5-110b would
 be ~10 GB/layer-group per request, while the sketched cache is a few MB.
+
+Prefill is ONE jitted dispatch (`Engine.prefill_tokens` → chunked forward +
+bulk cache write) and decode is one `lax.scan` dispatch — the script also
+times the batched prefill against the token-by-token loop it replaced
+(`prefill_tokens_sequential`, kept as the equivalence oracle).
 """
 import dataclasses
+import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
@@ -38,9 +45,22 @@ def main():
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (BATCH, PROMPT_LEN), dtype=np.int32)
 
-    eng = Engine(cfg, params, ServeConfig(max_len=PROMPT_LEN + NEW))
+    # f32 caches so the d_slots ≥ max_len rows are EXACT (greedy agreement
+    # 100%) — with bf16 caches the two paths round identical math differently
+    sc = dict(max_len=PROMPT_LEN + NEW, cache_dtype=jnp.float32)
+    eng = Engine(cfg, params, ServeConfig(**sc))
     cache_e = eng.new_cache(BATCH)
-    cache_e, logits_exact = eng.prefill_tokens(cache_e, prompts)
+    cache_e, logits_exact = eng.prefill_tokens(cache_e, prompts)   # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(eng.prefill_tokens(eng.new_cache(BATCH), prompts)[1])
+    t_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        eng.prefill_tokens_sequential(eng.new_cache(BATCH), prompts)[1]
+    )
+    t_seq = time.perf_counter() - t0
+    print(f"[prefill     ] batched {t_batched * 1e3:7.1f} ms  "
+          f"sequential {t_seq * 1e3:7.1f} ms  ({t_seq / t_batched:.0f}x)")
     exact, _ = eng.generate(prompts, NEW)
     print(f"[exact       ] cache={cache_mb(cache_e):8.3f} MB  "
           f"tokens[0,:8]={exact[0][:8].tolist()}")
@@ -51,8 +71,7 @@ def main():
     for d_slots in [16, 64, 256]:
         c = dataclasses.replace(
             cfg, sketch_attn=SketchAttnCfg(d_slots=d_slots, m=2, m_r=2))
-        eng = Engine(c, params, ServeConfig(max_len=PROMPT_LEN + NEW,
-                                            use_sketch=True))
+        eng = Engine(c, params, ServeConfig(use_sketch=True, **sc))
         cache_s = eng.new_cache(BATCH)
         cache_s, logits_s = eng.prefill_tokens(cache_s, prompts)
         out, _ = eng.generate(prompts, NEW)

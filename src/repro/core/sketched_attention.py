@@ -84,11 +84,26 @@ def accum_attention(
     sk: AccumSketch,       # sketch over the key sequence axis (n = Sk)
     *,
     pinv_iters: int = 6,
+    use_kernel: bool | None = None,
 ) -> jax.Array:
     """Sketched (landmark) attention, O(S·d). Bidirectional (prefill/encoder).
 
     Returns (B, H, Sq, Dh). float32 accumulation for the softmaxes.
+
+    ``use_kernel`` routes the two O(S·d) stages through the Pallas
+    ``landmark_attention`` kernels (auto: True on TPU, overridable with
+    ``REPRO_SKETCH_KERNEL`` — same gate as the KRR kernels); the fused
+    single-sweep variant additionally avoids materializing the (d, S)
+    ``Bm`` softmax (online-softmax accumulation of Bm·V).
     """
+    if use_kernel is None:
+        from repro.core.apply import default_use_kernel
+
+        use_kernel = default_use_kernel()
+    if use_kernel:
+        from repro.kernels.landmark_attention.ops import accum_attention_kernel
+
+        return accum_attention_kernel(q, k, v, sk, pinv_iters=pinv_iters)
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     kt = landmark_pool(k, sk, normalize=True)                       # (B,H,d,Dh)
     qt = landmark_pool(q, sk, normalize=True)                       # (B,H,d,Dh)
@@ -124,9 +139,23 @@ class SketchCache(NamedTuple):
 
 
 def init_sketch_cache(batch, kv_heads, d_slots, head_dim, dtype=jnp.float32) -> SketchCache:
-    """Zero-initialized decode-time landmark cache (K-slots, V-slots, counts)."""
+    """Zero-initialized decode-time landmark cache (K-slots, V-slots, counts).
+
+    ``dtype`` applies to the k/v slot accumulators; ``mass`` stays float32
+    always — it is a running count feeding the log-mass logit correction, and
+    bf16's 8-bit mantissa stops resolving +c increments after a few hundred
+    tokens (count saturation ⇒ silently wrong attention weights)."""
     z = jnp.zeros((batch, kv_heads, d_slots, head_dim), dtype)
-    return SketchCache(z, z, jnp.zeros((batch, kv_heads, d_slots), dtype))
+    return SketchCache(z, z, jnp.zeros((batch, kv_heads, d_slots), jnp.float32))
+
+
+def _slot_contrib(x: jax.Array, m_r: int, dtype) -> jax.Array:
+    """Per-slot contribution c·x (c = 1/√m_r so E[SSᵀ] = I), computed in f32
+    and rounded ONCE to the cache dtype — the shared definition that keeps the
+    sequential (`update_sketch_cache`) and batched (`prefill_sketch_cache`)
+    paths bitwise identical."""
+    c = 1.0 / jnp.sqrt(jnp.asarray(m_r, jnp.float32))
+    return (c * x.astype(jnp.float32)).astype(dtype)
 
 
 def update_sketch_cache(
@@ -135,16 +164,20 @@ def update_sketch_cache(
     """Scatter-add one new token into m_r slots.
 
     k_t, v_t: (B, Hkv, Dh); slots: (m_r,) int32 — host-side counter RNG draw,
-    shared across batch/heads (one gather pattern → one vectorized scatter)."""
+    shared across batch/heads (one gather pattern → one vectorized scatter).
+    Out-of-range slot indices (the Poisson scheme's padding marker, see
+    `decode_slots`) are dropped by JAX scatter semantics."""
     m_r = slots.shape[0]
-    c = 1.0 / jnp.sqrt(jnp.asarray(m_r, cache.k_sum.dtype))
     k_add = jnp.broadcast_to(
-        (c * k_t)[:, :, None, :], k_t.shape[:2] + (m_r,) + k_t.shape[-1:]
+        _slot_contrib(k_t, m_r, cache.k_sum.dtype)[:, :, None, :],
+        k_t.shape[:2] + (m_r,) + k_t.shape[-1:],
     )
     v_add = jnp.broadcast_to(
-        (c * v_t)[:, :, None, :], v_t.shape[:2] + (m_r,) + v_t.shape[-1:]
+        _slot_contrib(v_t, m_r, cache.v_sum.dtype)[:, :, None, :],
+        v_t.shape[:2] + (m_r,) + v_t.shape[-1:],
     )
-    mass_add = jnp.full(cache.mass.shape[:2] + (m_r,), c, cache.mass.dtype)
+    c_mass = 1.0 / jnp.sqrt(jnp.asarray(m_r, cache.mass.dtype))
+    mass_add = jnp.full(cache.mass.shape[:2] + (m_r,), c_mass, cache.mass.dtype)
     return SketchCache(
         cache.k_sum.at[:, :, slots, :].add(k_add),
         cache.v_sum.at[:, :, slots, :].add(v_add),
@@ -152,12 +185,127 @@ def update_sketch_cache(
     )
 
 
-def sketch_decode_attend(q_t: jax.Array, cache: SketchCache) -> jax.Array:
+def prefill_sketch_cache(
+    cache: SketchCache, k_seq: jax.Array, v_seq: jax.Array, slot_table: jax.Array
+) -> SketchCache:
+    """Scatter-add ALL L tokens into their slots in one vectorized segment-sum.
+
+    k_seq, v_seq: (B, Hkv, L, Dh); slot_table: (L, m_r) int32 (row t = the draw
+    `decode_slots(key, t, ...)` would make). One scatter with the L·m_r updates
+    flattened token-major — the same values in the same order as folding
+    `update_sketch_cache` over tokens, so the result is bitwise identical to
+    the sequential loop's cache (pinned by test). Out-of-range slot indices
+    (Poisson padding) are dropped."""
+    B, Hkv, L, Dh = k_seq.shape
+    m_r = slot_table.shape[-1]
+    flat = slot_table.reshape(-1)                                   # (L·m_r,)
+    k_add = jnp.broadcast_to(
+        _slot_contrib(k_seq, m_r, cache.k_sum.dtype)[:, :, :, None, :],
+        (B, Hkv, L, m_r, Dh),
+    ).reshape(B, Hkv, L * m_r, Dh)
+    v_add = jnp.broadcast_to(
+        _slot_contrib(v_seq, m_r, cache.v_sum.dtype)[:, :, :, None, :],
+        (B, Hkv, L, m_r, Dh),
+    ).reshape(B, Hkv, L * m_r, Dh)
+    c_mass = 1.0 / jnp.sqrt(jnp.asarray(m_r, cache.mass.dtype))
+    mass_add = jnp.full((B, Hkv, L * m_r), c_mass, cache.mass.dtype)
+    return SketchCache(
+        cache.k_sum.at[:, :, flat, :].add(k_add),
+        cache.v_sum.at[:, :, flat, :].add(v_add),
+        cache.mass.at[:, :, flat].add(mass_add),
+    )
+
+
+def sketch_prefill_attend(
+    q_seq: jax.Array, k_seq: jax.Array, v_seq: jax.Array, cache: SketchCache,
+    slot_table: jax.Array, *, chunk: int = 128,
+) -> tuple[jax.Array, SketchCache]:
+    """Decode-semantics attention for all L prefill positions in one dispatch.
+
+    q_seq: (B, H, L, Dh); k_seq, v_seq: (B, Hkv, L, Dh); slot_table: (L, m_r).
+    Position t attends over the EVOLVING cache state after its own token's
+    scatter (exactly what the sequential `update_sketch_cache` →
+    `sketch_decode_attend` loop sees), yet nothing per-position is
+    materialized: within a chunk of size c the cumulative cache never exists —
+    the logit/value contributions split into a past-carry term plus an
+    intra-chunk term through the (c, c) token-score matrix,
+
+        q_t·k_sum_t[j] = q_t·carry_k[j] + Σ_{s≤t} (q_t·k_s)·w[s, j]
+        out_t          = p̃_t·carry_v    + Σ_{s≤t} (p̃_t·wᵀ)[s]·v_s
+
+    with w the (c, d_slots) slot-weight matrix of the chunk (the accumulation
+    sketch restricted to the chunk) and p̃ = softmax / mass. The chunk carry is
+    advanced with the same token-major scatter as `prefill_sketch_cache`, so
+    the returned cache is bitwise identical to the sequential loop's; outputs
+    agree to float-associativity (≤1e-5 rel, pinned by the serve tests).
+    Returns (out (B, H, L, Dh) in q's dtype, final SketchCache)."""
+    B, H, L, Dh = q_seq.shape
+    Hkv = k_seq.shape[1]
+    G = H // Hkv
+    d_slots = cache.k_sum.shape[2]
+    m_r = slot_table.shape[-1]
+    f32 = jnp.float32
+    cm = min(chunk, L)
+    pad = (-L) % cm
+    if pad:
+        zpad4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q_seq = jnp.pad(q_seq, zpad4)
+        k_seq = jnp.pad(k_seq, zpad4)
+        v_seq = jnp.pad(v_seq, zpad4)
+        # padded tokens target the out-of-range slot index → dropped by scatter
+        slot_table = jnp.pad(slot_table, ((0, pad), (0, 0)),
+                             constant_values=d_slots)
+    nc = (L + pad) // cm
+    qs = q_seq.reshape(B, Hkv, G, nc, cm, Dh).transpose(3, 0, 1, 2, 4, 5)
+    ks = k_seq.reshape(B, Hkv, nc, cm, Dh).transpose(2, 0, 1, 3, 4)
+    vs = v_seq.reshape(B, Hkv, nc, cm, Dh).transpose(2, 0, 1, 3, 4)
+    ss = slot_table.reshape(nc, cm, m_r)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, f32))
+    c_mass = 1.0 / jnp.sqrt(jnp.asarray(m_r, f32))
+    tril = jnp.tril(jnp.ones((cm, cm), bool))                       # s ≤ t
+
+    def body(carry, xs):
+        qc, kc, vc, sl = xs
+        # (cm, d_slots) slot weights: Σ_r one-hot(slot) · c; out-of-range
+        # padding rows match nothing and stay zero
+        w = (sl[:, :, None] == jnp.arange(d_slots)[None, None, :])
+        w = jnp.sum(w, axis=1).astype(f32) * c_mass
+        mass_prev = carry.mass.astype(f32)                          # (B,Hkv,d)
+        k_prev = carry.k_sum.astype(f32)
+        v_prev = carry.v_sum.astype(f32)
+        qf, kf, vf = qc.astype(f32), kc.astype(f32), vc.astype(f32)
+        mass_cum = mass_prev[:, :, None, :] + jnp.cumsum(w, axis=0)[None, None]
+        A = jnp.einsum("bhgtd,bhsd->bhgts", qf, kf)
+        A = jnp.where(tril[None, None, None], A, 0.0)
+        qk = (jnp.einsum("bhgtd,bhjd->bhgtj", qf, k_prev)
+              + jnp.einsum("bhgts,sj->bhgtj", A, w))
+        mass_c = jnp.maximum(mass_cum, 1e-30)
+        logits = scale * qk / mass_c[:, :, None] + jnp.log(mass_c)[:, :, None]
+        logits = jnp.where((mass_cum <= 0)[:, :, None], -1e30, logits)
+        pn = jax.nn.softmax(logits, axis=-1) / mass_c[:, :, None]
+        pw = jnp.einsum("bhgtj,sj->bhgts", pn, w)
+        pw = jnp.where(tril[None, None, None], pw, 0.0)
+        o = (jnp.einsum("bhgtj,bhjd->bhgtd", pn, v_prev)
+             + jnp.einsum("bhgts,bhsd->bhgtd", pw, vf))
+        return prefill_sketch_cache(carry, kc, vc, sl), o
+
+    cache, outs = jax.lax.scan(body, cache, (qs, ks, vs, ss))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, H, L + pad, Dh)
+    return out[:, :, :L].astype(q_seq.dtype), cache
+
+
+def sketch_decode_attend(
+    q_t: jax.Array, cache: SketchCache, *, use_kernel: bool | None = None
+) -> jax.Array:
     """One-token attention over the compressed cache with log-mass correction.
 
     q_t: (B, H, Dh) with H = G·Hkv (GQA groups broadcast). Returns (B, H, Dh).
     logits_j = q·k̄_j/√h + log m_j,  k̄_j = k_sum_j / m_j — exact softmax
-    attention when every slot holds one token."""
+    attention when every slot holds one token.
+
+    ``use_kernel`` routes the softmax·V contraction through the Pallas
+    ``landmark_attention`` kernel with the log-mass correction folded into its
+    bias lane (auto: True on TPU / REPRO_SKETCH_KERNEL, like the KRR path)."""
     B, H, Dh = q_t.shape
     Hkv = cache.k_sum.shape[1]
     G = H // Hkv
@@ -166,19 +314,87 @@ def sketch_decode_attend(q_t: jax.Array, cache: SketchCache) -> jax.Array:
     kbar = cache.k_sum.astype(f32) / mass[..., None]
     vbar = cache.v_sum.astype(f32) / mass[..., None]
     qg = q_t.reshape(B, Hkv, G, Dh).astype(f32)
+    if use_kernel is None:
+        from repro.core.apply import default_use_kernel
+
+        use_kernel = default_use_kernel()
+    bias = jnp.where(cache.mass <= 0, -1e30, jnp.log(mass))         # (B,Hkv,d)
+    if use_kernel:
+        from repro.kernels.landmark_attention.ops import landmark_attend
+
+        out = jax.vmap(landmark_attend)(
+            qg.reshape(B * Hkv, G, Dh),
+            kbar.reshape(B * Hkv, -1, Dh),
+            vbar.reshape(B * Hkv, -1, Dh),
+            bias.reshape(B * Hkv, -1),
+        )
+        return out.reshape(B, H, Dh).astype(q_t.dtype)
     scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, f32))
     logits = jnp.einsum("bhgk,bhdk->bhgd", qg, kbar) * scale
-    logits = logits + jnp.log(mass)[:, :, None, :]
-    empty = cache.mass[:, :, None, :] <= 0
-    logits = jnp.where(jnp.broadcast_to(empty, logits.shape), -1e30, logits)
+    logits = logits + bias[:, :, None, :]
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgd,bhdk->bhgk", p, vbar)
     return out.reshape(B, H, Dh).astype(q_t.dtype)
 
 
-def decode_slots(key: jax.Array, step, d_slots: int, m_r: int) -> jax.Array:
-    """Counter-based slot draw for position `step` (deterministic, resumable)."""
-    return jax.random.randint(jax.random.fold_in(key, step), (m_r,), 0, d_slots)
+DECODE_SLOT_SCHEMES = ("uniform", "poisson")
+
+
+def decode_slots(
+    key: jax.Array, step, d_slots: int, m_r: int, *,
+    scheme: str = "uniform", max_len: int | None = None,
+) -> jax.Array:
+    """Counter-based slot draw for position `step` (deterministic, resumable).
+
+    Returns (m_r,) int32 slot indices; entries equal to ``d_slots`` are
+    padding (dropped by the scatter — JAX out-of-bounds update semantics).
+
+    ``scheme`` picks the streaming view of the PR 7 sampling zoo:
+      * ``"uniform"`` — m_r i.i.d. uniform slots (with replacement), the
+        transpose-streamed batch sketch: per-slot load Binomial(L, m_r/d).
+      * ``"poisson"`` — every slot flips an independent coin with inclusion
+        probability π = m_r/d_slots (arXiv:2205.08588's Poisson sampling):
+        the draw count is Binomial(d_slots, π) with mean m_r, truncated to at
+        most m_r slots (a uniform subset on overflow, ranked by the inclusion
+        uniforms — the same overflow rule as `schemes.poisson_pieces`). No
+        Horvitz–Thompson reweighting is needed: scaling every token's
+        contribution by the same constant shifts log-mass uniformly and
+        cancels in the decode softmax.
+
+    ``max_len``: when the engine knows the whole stream fits in the slots
+    (max_len ≤ d_slots), the draw degrades to the identity — slot t for
+    position t — so every slot is a singleton and sketched decode IS exact
+    attention (the module docstring's "degrades gracefully" claim)."""
+    if scheme not in DECODE_SLOT_SCHEMES:
+        raise ValueError(
+            f"unknown decode slot scheme {scheme!r}; pick from {DECODE_SLOT_SCHEMES}"
+        )
+    if max_len is not None and max_len <= d_slots:
+        pos = jnp.asarray(step, jnp.int32) % jnp.int32(d_slots)
+        return jnp.full((m_r,), pos, jnp.int32)
+    k = jax.random.fold_in(key, step)
+    if scheme == "uniform":
+        return jax.random.randint(k, (m_r,), 0, d_slots)
+    u = jax.random.uniform(k, (d_slots,))
+    pi = jnp.minimum(1.0, m_r / d_slots)
+    inc = u < pi
+    order = jnp.argsort(jnp.where(inc, u, 2.0))[:m_r]   # included slots first
+    valid = jnp.arange(m_r) < jnp.sum(inc)
+    return jnp.where(valid, order, d_slots).astype(jnp.int32)
+
+
+def decode_slot_table(
+    key: jax.Array, length: int, d_slots: int, m_r: int, *,
+    scheme: str = "uniform", max_len: int | None = None, offset: int = 0,
+) -> jax.Array:
+    """(length, m_r) stacked `decode_slots` draws for positions offset..offset+L.
+
+    Row t is bit-for-bit the draw the sequential decode loop makes at position
+    offset + t — the prefill path's slot schedule."""
+    steps = jnp.arange(length, dtype=jnp.int32) + offset
+    return jax.vmap(
+        lambda s: decode_slots(key, s, d_slots, m_r, scheme=scheme, max_len=max_len)
+    )(steps)
 
 
 def make_seq_sketch(key, seq_len: int, d: int, m: int = 1, *, local: bool = True) -> AccumSketch:

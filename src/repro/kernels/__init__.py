@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom accelerator kernels (OPTIONAL layer).
+
+Add ``<name>/kernel.py`` + ``ops.py`` + ``ref.py`` ONLY for compute
+hot-spots the paper itself optimizes with a custom kernel; leave this
+package empty if the paper has none. Current members: ``accum_apply``
+(sketch application, KRR path) and ``landmark_attention`` (sketched
+attention decode/prefill stages, serving path).
+"""

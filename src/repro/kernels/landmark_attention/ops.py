@@ -1,5 +1,22 @@
-"""jit'd wrapper: batched/multi-head AccumAttention using the Pallas kernel for
-the O(S·L) landmark stage (vmapped over batch×head)."""
+"""Padded, autotuned entry points for the landmark-attention kernel family.
+
+Mirrors `kernels/accum_apply/ops.py` (the PR 1/5 treatment):
+
+  * ``interpret`` defaults to backend autodetection (compiled Mosaic on TPU,
+    interpreter on CPU CI);
+  * arbitrary shapes are padded to the block grid and sliced back — S rows of
+    q pad with zeros (independent rows, sliced off), landmark L pads with
+    −1e30 bias / masked columns so padded landmarks get exactly zero softmax
+    weight;
+  * block sizes come from the SAME measured autotune cache as the KRR kernels
+    (`kernels/accum_apply/autotune.py`, kinds ``landmark_attention`` /
+    ``landmark_stats``): first eager call times the candidates on the real
+    arrays and persists the winner to ``REPRO_AUTOTUNE_CACHE``;
+  * ``accum_attention_kernel`` is the full fused pipeline:
+    ``landmark_stats`` (ONE sweep over S for W + online-softmax Bm·V — the
+    (L, S) Bm matrix is never materialized) → Newton–Schulz W⁺ (small, plain
+    XLA) → ``landmark_attend`` for the O(S·L) F-stage.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,32 +24,138 @@ import jax.numpy as jnp
 
 from repro.core.sketch import AccumSketch
 from repro.core.sketched_attention import _newton_schulz_pinv, landmark_pool
-from repro.kernels.landmark_attention.kernel import landmark_attention
+from repro.kernels.accum_apply import autotune
+from repro.kernels.accum_apply.ops import default_interpret
+from repro.kernels.landmark_attention.kernel import (
+    landmark_attention,
+    landmark_stats,
+)
+
+NEG_INF = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _bq_candidates(S: int, fallback: int) -> list[tuple[int, ...]]:
+    cands = sorted({min(b, S) for b in (128, 256, 512, 1024)} | {fallback})
+    return [(b,) for b in cands if b >= 8]
+
+
+def landmark_attend(
+    q: jax.Array, kt: jax.Array, M: jax.Array, bias: jax.Array | None = None, *,
+    bq: int | None = None, interpret: bool | None = None,
+) -> jax.Array:
+    """softmax(q k̃ᵀ/√Dh + bias) @ M for arbitrary (S, L) — padded + autotuned.
+
+    q: (S, Dh); kt: (L, Dh); M: (L, Dv); bias: (L,) f32 or None (the decode
+    path folds its log-mass correction and empty-slot masks in here).
+    Returns (S, Dv) in q's dtype."""
+    S, Dh = q.shape
+    L, Dv = M.shape
+    if interpret is None:
+        interpret = default_interpret()
+    if bias is None:
+        bias = jnp.zeros((L,), jnp.float32)
+    fallback = min(256, max(8, S))
+    if bq is None:
+        key = (S, Dh, L, Dv)
+        (bq,) = autotune.measured_blocks(
+            "landmark_attention", key, q.dtype, interpret,
+            _bq_candidates(S, fallback),
+            lambda blocks: _attend_padded(
+                q, kt, M, bias, bq=blocks[0], interpret=interpret
+            ),
+            (fallback,),
+            autotune.is_concrete(q, kt, M, bias),
+        )
+    return _attend_padded(q, kt, M, bias, bq=bq, interpret=interpret)
+
+
+def _attend_padded(q, kt, M, bias, *, bq, interpret):
+    S, L = q.shape[0], M.shape[0]
+    bq = min(bq, S)
+    qp = _pad_to(q, 0, bq)                      # padded q rows: sliced off
+    # padded landmarks: −inf bias ⇒ exactly zero softmax weight
+    ktp = _pad_to(kt, 0, 8)
+    Mp = _pad_to(M, 0, 8)
+    bp = _pad_to(bias.astype(jnp.float32), 0, 8, value=NEG_INF)
+    out = landmark_attention(qp, ktp, Mp, bp, bq=bq, interpret=interpret)
+    return out[:S]
+
+
+def landmark_stats_fused(
+    qt: jax.Array, kt: jax.Array, k: jax.Array, v: jax.Array, *,
+    bs: int | None = None, interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (W, Bm·V) for arbitrary (S, L) — padded + autotuned.
+
+    qt, kt: (L, Dh); k: (S, Dh); v: (S, Dv). One sweep over S computes both
+    the landmark-row softmax W = softmax(q̃k̃ᵀ) and the online-softmax
+    accumulation of softmax(q̃Kᵀ)·V. Returns (W (L, L), BmV (L, Dv)) f32."""
+    L, Dh = qt.shape
+    S, Dv = v.shape
+    if interpret is None:
+        interpret = default_interpret()
+    fallback = min(512, max(8, S))
+    if bs is None:
+        key = (S, Dh, L, Dv)
+        (bs,) = autotune.measured_blocks(
+            "landmark_stats", key, k.dtype, interpret,
+            _bq_candidates(S, fallback),
+            lambda blocks: _stats_padded(
+                qt, kt, k, v, bs=blocks[0], interpret=interpret
+            ),
+            (fallback,),
+            autotune.is_concrete(qt, kt, k, v),
+        )
+    return _stats_padded(qt, kt, k, v, bs=bs, interpret=interpret)
+
+
+def _stats_padded(qt, kt, k, v, *, bs, interpret):
+    L, S = qt.shape[0], k.shape[0]
+    bs = min(bs, S)
+    W, BmV = landmark_stats(
+        _pad_to(qt, 0, 8), _pad_to(kt, 0, 8), _pad_to(k, 0, bs), _pad_to(v, 0, bs),
+        n_valid=S, l_valid=L, bs=bs, interpret=interpret,
+    )
+    return W[:L, :L], BmV[:L]
 
 
 def accum_attention_kernel(
     q: jax.Array, k: jax.Array, v: jax.Array, sk: AccumSketch, *,
-    bq: int = 256, pinv_iters: int = 6, interpret: bool = True,
+    bq: int | None = None, pinv_iters: int = 6, interpret: bool | None = None,
 ) -> jax.Array:
-    """Full sketched attention (B, H, S, Dh) with the hot stage in Pallas.
+    """Full sketched attention (B, H, S, Dh) with both hot stages in Pallas.
 
     Stages (matching core.sketched_attention.accum_attention):
-      k̃/q̃ = landmark pools;  W = softmax(q̃k̃ᵀ);  Bm = softmax(q̃Kᵀ);
-      M = W⁺(Bm V)  [small, plain XLA];  out = softmax(QK̃ᵀ)M  [Pallas].
-    """
-    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
-    f32 = jnp.float32
+      k̃/q̃ = landmark pools;
+      (W, BmV) = `landmark_stats` — ONE fused sweep over S (no (L, S) Bm);
+      M = W⁺ · BmV  [small d×d, plain XLA Newton–Schulz];
+      out = softmax(QK̃ᵀ)·M — `landmark_attend` [Pallas, O(S·L)].
+    The F·M stage cannot fuse into the sweep: M depends on the completed W."""
+    if interpret is None:
+        interpret = default_interpret()
     kt = landmark_pool(k, sk, normalize=True)
     qt = landmark_pool(q, sk, normalize=True)
-    W = jax.nn.softmax((qt.astype(f32) @ jnp.swapaxes(kt, -1, -2).astype(f32)) * scale, axis=-1)
-    Bm = jax.nn.softmax((qt.astype(f32) @ jnp.swapaxes(k, -1, -2).astype(f32)) * scale, axis=-1)
-    M = _newton_schulz_pinv(W, pinv_iters) @ (Bm @ v.astype(f32))      # (B,H,L,Dv)
 
     B, H = q.shape[:2]
     qf = q.reshape((B * H,) + q.shape[2:])
+    kf = k.reshape((B * H,) + k.shape[2:])
+    vf = v.reshape((B * H,) + v.shape[2:])
     ktf = kt.reshape((B * H,) + kt.shape[2:])
-    Mf = M.astype(q.dtype).reshape((B * H,) + M.shape[2:])
+    qtf = qt.reshape((B * H,) + qt.shape[2:])
+    W, BmV = jax.vmap(
+        lambda a, b, c, d: landmark_stats_fused(a, b, c, d, interpret=interpret)
+    )(qtf, ktf, kf, vf)
+    M = _newton_schulz_pinv(W, pinv_iters) @ BmV                    # (BH,L,Dv)
     out = jax.vmap(
-        lambda a, b, c: landmark_attention(a, b, c, bq=bq, interpret=interpret)
-    )(qf, ktf, Mf)
+        lambda a, b, c: landmark_attend(a, b, c, bq=bq, interpret=interpret)
+    )(qf, ktf, M.astype(q.dtype))
     return out.reshape(q.shape[:2] + out.shape[1:])

@@ -9,9 +9,30 @@ import jax
 import jax.numpy as jnp
 
 
-def landmark_attention_ref(q: jax.Array, kt: jax.Array, M: jax.Array) -> jax.Array:
-    """q: (S, Dh); kt: (L, Dh); M: (L, Dv). Returns (S, Dv)."""
+def landmark_attention_ref(
+    q: jax.Array, kt: jax.Array, M: jax.Array, bias: jax.Array | None = None
+) -> jax.Array:
+    """q: (S, Dh); kt: (L, Dh); M: (L, Dv); bias: (L,) or None. Returns (S, Dv)."""
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     logits = q.astype(jnp.float32) @ kt.T.astype(jnp.float32) * scale
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)[None, :]
     p = jax.nn.softmax(logits, axis=-1)
     return (p @ M.astype(jnp.float32)).astype(q.dtype)
+
+
+def landmark_stats_ref(
+    qt: jax.Array, kt: jax.Array, k: jax.Array, v: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused sweep: (W, Bm·V) in plain jnp.
+
+    qt, kt: (L, Dh); k: (S, Dh); v: (S, Dv) →
+    (softmax(q̃k̃ᵀ/√Dh) (L, L) f32, softmax(q̃Kᵀ/√Dh)·V (L, Dv) f32)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(qt.shape[-1], jnp.float32))
+    W = jax.nn.softmax(
+        qt.astype(jnp.float32) @ kt.T.astype(jnp.float32) * scale, axis=-1
+    )
+    Bm = jax.nn.softmax(
+        qt.astype(jnp.float32) @ k.T.astype(jnp.float32) * scale, axis=-1
+    )
+    return W, Bm @ v.astype(jnp.float32)

@@ -12,6 +12,7 @@ from repro.core.sketched_attention import (
     SketchCache,
     init_sketch_cache,
     sketch_decode_attend,
+    sketch_prefill_attend,
     update_sketch_cache,
 )
 from repro.models.common import apply_rope, dense_init
@@ -54,16 +55,15 @@ def _qkv(p, h, cfg: ModelConfig, sin, cos):
     return q, k, v
 
 
-def attn_forward(
-    p, h: jax.Array, cfg: ModelConfig, sin, cos, *,
-    window: int | None = None, q_chunk: int = 512,
+def _chunked_causal(
+    q, k, v, cfg: ModelConfig, *, window: int | None, q_chunk: int, out_dtype
 ) -> jax.Array:
-    """Causal (optionally sliding-window) attention, scanned over query chunks
-    so peak memory is O(B·H·q_chunk·S) instead of O(B·H·S²)."""
-    B, S, D = h.shape
+    """Chunked-causal attention core shared by `attn_forward` / `attn_prefill`:
+    q (B, S, H, Dh), k/v (B, S, Hkv, Dh) → (B, S, H·Dh) pre-output-projection,
+    scanned over query chunks so peak memory is O(B·H·q_chunk·S) not O(B·H·S²)."""
+    B, S = q.shape[:2]
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // Hkv
-    q, k, v = _qkv(p, h, cfg, sin, cos)
     # head-aligned TP: shard the KV-head axis (padded if it doesn't divide)
     # so the QKᵀ/AV contractions stay shard-local — see sharding.constrain
     from repro.sharding import constrain
@@ -92,10 +92,21 @@ def attn_forward(
         o = jnp.einsum(
             "bhgqs,bshd->bqhgd", jax.nn.softmax(logits, axis=-1), v.astype(jnp.float32)
         )
-        return o.astype(h.dtype)
+        return o.astype(out_dtype)
 
     out = jax.lax.map(lambda args: body(*args), (jnp.arange(nq), qs))
-    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H * Dh)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H * Dh)
+
+
+def attn_forward(
+    p, h: jax.Array, cfg: ModelConfig, sin, cos, *,
+    window: int | None = None, q_chunk: int = 512,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, scanned over query chunks
+    so peak memory is O(B·H·q_chunk·S) instead of O(B·H·S²)."""
+    q, k, v = _qkv(p, h, cfg, sin, cos)
+    out = _chunked_causal(q, k, v, cfg, window=window, q_chunk=q_chunk,
+                          out_dtype=h.dtype)
     return out @ p["wo"]
 
 
@@ -111,6 +122,35 @@ class KVCache(NamedTuple):
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
     shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
     return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+
+def attn_prefill(
+    p, h: jax.Array, cache: KVCache, cfg: ModelConfig, sin, cos, *,
+    window: int | None = None, q_chunk: int = 512,
+) -> tuple[jax.Array, KVCache]:
+    """Batched exact-cache prefill: chunked-causal attention for all L prompt
+    tokens (positions 0..L-1) plus ONE bulk KV-cache write — replaces L
+    sequential `attn_decode` dispatches. Sliding-window (ring-buffer) caches
+    keep exactly the last S_cache tokens at slot t % S_cache, matching what L
+    sequential ring writes would leave behind. Returns (out (B, L, D), cache)."""
+    B, L, _ = h.shape
+    q, k, v = _qkv(p, h, cfg, sin, cos)
+    out = _chunked_causal(q, k, v, cfg, window=window, q_chunk=q_chunk,
+                          out_dtype=h.dtype) @ p["wo"]
+    S_cache = cache.k.shape[1]
+    kc, vc = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+    if L <= S_cache:
+        cache = KVCache(
+            jax.lax.dynamic_update_slice(cache.k, kc, (0, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(cache.v, vc, (0, 0, 0, 0)),
+        )
+    else:
+        ring = (jnp.arange(L - S_cache, L)) % S_cache
+        cache = KVCache(
+            cache.k.at[:, ring].set(kc[:, L - S_cache:]),
+            cache.v.at[:, ring].set(vc[:, L - S_cache:]),
+        )
+    return out, cache
 
 
 def attn_decode(
@@ -154,9 +194,30 @@ def attn_decode(
 # --------------------------------------------------------------------------- #
 
 def init_attn_sketch_cache(cfg: ModelConfig, batch: int, dtype) -> SketchCache:
+    """Sketched attention cache sized from cfg (`dtype` for k/v sums; mass f32)."""
     return init_sketch_cache(
         batch, cfg.n_kv_heads, cfg.sketch_attn.d_slots, cfg.head_dim, dtype
     )
+
+
+def attn_prefill_sketched(
+    p, h: jax.Array, cache: SketchCache, cfg: ModelConfig, sin, cos,
+    slot_table: jax.Array, *, chunk: int = 128,
+) -> tuple[jax.Array, SketchCache]:
+    """Batched sketched-cache prefill: one vectorized segment-sum scatter for
+    all L tokens' (k, v) plus evolving-cache attention (position t sees the
+    cache state after its own scatter — identical semantics to L sequential
+    `attn_decode_sketched` dispatches, see `sketch_prefill_attend`).
+    slot_table: (L, m_r) from `decode_slot_table`. Returns (out (B, L, D), cache)."""
+    B, L, _ = h.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q, k, v = _qkv(p, h, cfg, sin, cos)
+    o, cache = sketch_prefill_attend(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        cache, slot_table, chunk=chunk,
+    )
+    out = o.transpose(0, 2, 1, 3).reshape(B, L, H * Dh).astype(h.dtype) @ p["wo"]
+    return out, cache
 
 
 def attn_decode_sketched(

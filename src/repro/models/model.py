@@ -230,8 +230,11 @@ class DecodeCache(NamedTuple):
 def _init_block_cache(kind, cfg: ModelConfig, batch, max_len, dtype, use_sketch):
     if kind in ("attn", "attn_shared"):
         if use_sketch:
-            # AccumSketch-compressed cache (paper technique): O(d_slots) memory
-            return att.init_attn_sketch_cache(cfg, batch, jnp.float32)
+            # AccumSketch-compressed cache (paper technique): O(d_slots) memory.
+            # Honors the caller's dtype for k_sum/v_sum (the seed hardcoded
+            # f32 — 2× the memory the config asked for); mass stays f32 inside
+            # init_sketch_cache regardless.
+            return att.init_attn_sketch_cache(cfg, batch, dtype)
         return att.init_kv_cache(cfg, batch, max_len, dtype)
     if kind == "attn_local":
         return att.init_kv_cache(cfg, batch, min(max_len, cfg.window), dtype)
@@ -294,6 +297,89 @@ def _block_decode(kind, bp, shared, h, state, cfg, sin_t, cos_t, pos, slots, use
     else:
         raise ValueError(kind)
     return h + y, state
+
+
+def _block_prefill(kind, bp, shared, h, state, cfg, sin, cos, slot_table, q_chunk):
+    """One block's batched prefill: full-sequence forward + cache state as if
+    the L tokens had been decoded one by one (see `prefill_with_cache`)."""
+    eps = cfg.norm_eps
+    if kind in ("attn", "attn_local", "attn_shared"):
+        p = shared if kind == "attn_shared" else bp
+        x = rmsnorm(h, p["attn"]["norm"], eps)
+        if isinstance(state, SketchCache):
+            y, state = att.attn_prefill_sketched(
+                p["attn"], x, state, cfg, sin, cos, slot_table
+            )
+        else:
+            window = cfg.window if kind == "attn_local" else None
+            y, state = att.attn_prefill(
+                p["attn"], x, state, cfg, sin, cos, window=window, q_chunk=q_chunk
+            )
+        h = h + y
+        if "ffn" in p:
+            x = rmsnorm(h, p["ffn"]["norm"], eps)
+            if cfg.ffn == "moe" and kind != "attn_shared":
+                y, _ = moe_mod.moe_forward(p["ffn"], x, cfg.moe)
+            else:
+                y = ffn_mod.ffn_forward(p["ffn"], x)
+            h = h + y
+        return h, state
+    # recurrent mixers have per-token decode transitions only — run them as an
+    # inner scan over tokens (still ONE dispatch; the sequential dependence is
+    # inherent to the state recurrence, not a Python-loop artifact)
+    p = bp["mixer"]
+    x = rmsnorm(h, p["norm"], eps)
+    decode_fn = {
+        "mamba2": ssm_mod.mamba2_decode,
+        "mlstm": xlstm_mod.mlstm_decode,
+        "slstm": xlstm_mod.slstm_decode,
+    }[kind]
+
+    def tok(st, x_t):
+        y, st = decode_fn(p, x_t[:, None], st, cfg)
+        return st, y[:, 0]
+
+    state, ys = jax.lax.scan(tok, state, x.swapaxes(0, 1))
+    return h + ys.swapaxes(0, 1), state
+
+
+def prefill_with_cache(
+    params: Params, tokens: jax.Array, cfg: ModelConfig, cache: DecodeCache, *,
+    slot_table: jax.Array | None = None, q_chunk: int = 512,
+) -> tuple[jax.Array, DecodeCache]:
+    """Batched prefill: consume all L prompt tokens in ONE dispatch and return
+    (last-position logits (B, V), updated DecodeCache) — the state the
+    sequential decode loop would reach after positions 0..L-1, at chunked
+    `forward` cost instead of L jitted dispatches.
+
+    Exact caches get a bulk KV write, sketched caches one vectorized
+    segment-sum scatter (bitwise-identical to the token loop's cache);
+    `slot_table` (L, m_r) from `decode_slot_table` is required when the cache
+    contains SketchCache states."""
+    B, L = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h * jnp.sqrt(jnp.asarray(cfg.d_model, h.dtype))
+    h = constrain(h, "dp", None, None, policy=cfg.sharding_policy)
+    sin, cos = rope_table(jnp.arange(L), cfg.head_dim, cfg.rope_theta)
+    shared = params["shared"]
+
+    def superblock(h, xs):
+        sb_params, sb_cache = xs
+        h = constrain(h, "dp", None, None, policy=cfg.sharding_policy)
+        new_states = {}
+        for i, kind in enumerate(cfg.pattern):
+            bp = sb_params.get(f"pos{i}")
+            h, st = _block_prefill(
+                kind, bp, shared, h, sb_cache[f"pos{i}"], cfg, sin, cos,
+                slot_table, q_chunk,
+            )
+            new_states[f"pos{i}"] = st
+        return h, new_states
+
+    h, new_blocks = jax.lax.scan(superblock, h, (params["blocks"], cache.blocks))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(h[:, -1], output_embedding(params))
+    return logits, DecodeCache(new_blocks)
 
 
 def decode_step(

@@ -3,6 +3,21 @@
 The sketched cache (paper technique) makes per-request memory independent of
 context length — the long_500k production shape decodes against d_slots
 landmark slots instead of a 500k-entry KV cache.
+
+Request lifecycle (each phase is ONE jitted dispatch):
+
+  prefill  — `prefill_with_cache`: all L prompt tokens in a single chunked
+             forward with a bulk cache write (exact: dynamic_update_slice;
+             sketched: one vectorized segment-sum scatter, bitwise-identical
+             to the token-by-token loop's cache);
+  decode   — a `lax.scan` of exactly n_new - 1 `decode_step`s (the first
+             output token is sampled from the prefill logits, so an n-token
+             request runs n - 1 steps — the seed ran n and threw the last
+             away).
+
+Slot draws and temperature sampling use independent counter-based RNG streams
+(`fold_in(fold_in(key, tag), pos)`); the seed derived both from
+`fold_in(key, pos)`, correlating cache placement with sampled tokens.
 """
 from __future__ import annotations
 
@@ -14,18 +29,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.sketched_attention import decode_slots
-from repro.models.model import DecodeCache, decode_step, init_cache
+from repro.core.sketched_attention import decode_slot_table, decode_slots
+from repro.models.model import (
+    DecodeCache,
+    decode_step,
+    init_cache,
+    prefill_with_cache,
+)
 
 PyTree = Any
+
+# distinct fold_in tags so slot draws and sampling draws are independent
+# streams off the same seed (both are then folded with the position counter)
+_SLOT_STREAM = 0x510C
+_SAMPLE_STREAM = 0x5A3E
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine knobs (cache flavor, sampling, slot-draw scheme).
+
+    `slot_scheme` selects the streaming sampling scheme for sketched-cache
+    slot draws ("uniform" | "poisson" — see `decode_slots`). `cache_dtype`
+    applies to both exact KV caches and the sketched k/v slot accumulators
+    (mass stays f32). When `max_len <= cfg.sketch_attn.d_slots` the slot draw
+    degrades to the identity and sketched decode is exact attention."""
+
     max_len: int = 2048
     use_sketch: bool = False
     temperature: float = 0.0        # 0 → greedy
     seed: int = 0
+    slot_scheme: str = "uniform"
+    cache_dtype: Any = jnp.bfloat16
 
 
 class Engine:
@@ -35,24 +70,55 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: PyTree, sc: ServeConfig):
         self.cfg, self.params, self.sc = cfg, params, sc
         self.key = jax.random.PRNGKey(sc.seed)
+        self._slot_key = jax.random.fold_in(self.key, _SLOT_STREAM)
+        self._sample_key = jax.random.fold_in(self.key, _SAMPLE_STREAM)
         self._step = jax.jit(
             lambda p, c, t, i, s: decode_step(
                 p, c, t, i, cfg, slots=s, use_sketch=sc.use_sketch
             )
         )
+        self._prefill = jax.jit(
+            lambda p, c, t, st: prefill_with_cache(p, t, cfg, c, slot_table=st)
+        )
+        self._decode = jax.jit(self._decode_scan, static_argnames=("n_steps",))
 
     def new_cache(self, batch: int) -> DecodeCache:
+        """Fresh decode cache (exact KV or sketched per `sc.use_sketch`)."""
         return init_cache(
-            self.cfg, batch, self.sc.max_len, use_sketch=self.sc.use_sketch
+            self.cfg, batch, self.sc.max_len, self.sc.cache_dtype,
+            use_sketch=self.sc.use_sketch,
         )
 
-    def _slots(self, pos: int) -> jax.Array:
+    def _slots(self, pos) -> jax.Array:
         sa = self.cfg.sketch_attn
-        return decode_slots(self.key, pos, sa.d_slots, sa.m_r)
+        return decode_slots(
+            self._slot_key, pos, sa.d_slots, sa.m_r,
+            scheme=self.sc.slot_scheme, max_len=self.sc.max_len,
+        )
 
-    def prefill_tokens(self, cache: DecodeCache, prompts: np.ndarray) -> tuple[DecodeCache, jax.Array]:
-        """Sequential decode-mode prefill (token by token) — exercises the same
-        cache path the decoder uses. prompts: (B, L)."""
+    def _slot_table(self, length: int) -> jax.Array:
+        sa = self.cfg.sketch_attn
+        return decode_slot_table(
+            self._slot_key, length, sa.d_slots, sa.m_r,
+            scheme=self.sc.slot_scheme, max_len=self.sc.max_len,
+        )
+
+    def prefill_tokens(
+        self, cache: DecodeCache, prompts: np.ndarray
+    ) -> tuple[DecodeCache, jax.Array]:
+        """Batched one-dispatch prefill of all L prompt tokens (positions
+        0..L-1). prompts: (B, L). Returns (cache, last-position logits)."""
+        tokens = jnp.asarray(prompts)
+        table = self._slot_table(tokens.shape[1]) if self.sc.use_sketch else None
+        logits, cache = self._prefill(self.params, cache, tokens, table)
+        return cache, logits
+
+    def prefill_tokens_sequential(
+        self, cache: DecodeCache, prompts: np.ndarray
+    ) -> tuple[DecodeCache, jax.Array]:
+        """Token-by-token decode-mode prefill (L jitted dispatches) — the
+        pre-batched path, kept as the equivalence oracle for tests and the
+        baseline for `benchmarks/attention_bench.py`. prompts: (B, L)."""
         logits = None
         for t in range(prompts.shape[1]):
             logits, cache = self._step(
@@ -61,25 +127,44 @@ class Engine:
             )
         return cache, logits
 
+    def _decode_scan(self, params, cache, tok0, pos0, *, n_steps: int):
+        """n_steps decode steps + samples as one jitted `lax.scan` dispatch."""
+        def _body(carry, _):
+            cache, tok, pos = carry
+            logits, cache = decode_step(
+                params, cache, tok, pos, self.cfg,
+                slots=self._slots(pos), use_sketch=self.sc.use_sketch,
+            )
+            nxt = self._sample(logits, pos + 1)
+            return (cache, nxt, pos + 1), nxt
+
+        (cache, _, _), toks = jax.lax.scan(
+            _body, (cache, tok0, pos0), None, length=n_steps
+        )
+        return jnp.swapaxes(toks, 0, 1), cache
+
     def generate(
         self, prompts: np.ndarray, n_new: int
     ) -> tuple[np.ndarray, DecodeCache]:
+        """Prefill `prompts` (B, L) and generate n_new tokens per sequence.
+
+        Token 0 is sampled from the prefill logits; the scan then runs exactly
+        n_new - 1 decode steps (each producing the next token), so no model
+        forward's outputs are ever discarded. Returns ((B, n_new), cache)."""
         B, L = prompts.shape
         cache = self.new_cache(B)
         cache, logits = self.prefill_tokens(cache, prompts)
-        out = []
-        tok = self._sample(logits, L)
-        for i in range(n_new):
-            out.append(np.asarray(tok))
-            pos = L + i
-            logits, cache = self._step(
-                self.params, cache, tok, jnp.int32(pos), self._slots(pos)
-            )
-            tok = self._sample(logits, pos + 1)
-        return np.stack(out, axis=1), cache
+        tok = self._sample(logits, jnp.int32(L))
+        if n_new <= 1:
+            return np.asarray(tok)[:, None], cache
+        toks, cache = self._decode(
+            self.params, cache, tok, jnp.int32(L), n_steps=n_new - 1
+        )
+        out = np.concatenate([np.asarray(tok)[:, None], np.asarray(toks)], axis=1)
+        return out, cache
 
-    def _sample(self, logits: jax.Array, pos: int) -> jax.Array:
+    def _sample(self, logits: jax.Array, pos) -> jax.Array:
         if self.sc.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(self.key, pos)
+        k = jax.random.fold_in(self._sample_key, pos)
         return jax.random.categorical(k, logits / self.sc.temperature).astype(jnp.int32)

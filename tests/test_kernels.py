@@ -17,8 +17,15 @@ from repro.kernels.accum_apply.ops import (
 )
 from repro.kernels.accum_apply.ref import accum_apply_ref, sketch_both_ref
 from repro.kernels.landmark_attention.kernel import landmark_attention
-from repro.kernels.landmark_attention.ops import accum_attention_kernel
-from repro.kernels.landmark_attention.ref import landmark_attention_ref
+from repro.kernels.landmark_attention.ops import (
+    accum_attention_kernel,
+    landmark_attend,
+    landmark_stats_fused,
+)
+from repro.kernels.landmark_attention.ref import (
+    landmark_attention_ref,
+    landmark_stats_ref,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -217,3 +224,113 @@ def test_full_sketched_attention_kernel_vs_core():
     core = accum_attention(q, k, v, sk)
     kern = accum_attention_kernel(q, k, v, sk, bq=64)
     np.testing.assert_allclose(np.asarray(core), np.asarray(kern), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# landmark kernels: padding, bias lane, fused stats, autotune registration
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("S,L,Dv", [(100, 13, 24), (7, 3, 5), (256, 64, 64)])
+def test_landmark_attend_padded_bias_vs_oracle(S, L, Dv):
+    """The ops-level entry pads arbitrary (S, L) to the block grid; padded
+    landmarks get −inf bias so they carry exactly zero softmax weight, and the
+    caller-supplied bias lane (the decode log-mass correction) is honored."""
+    Dh = 16
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (S, Dh))
+    kt = jax.random.normal(ks[1], (L, Dh))
+    M = jax.random.normal(ks[2], (L, Dv))
+    bias = jax.random.normal(ks[3], (L,))
+    ref = landmark_attention_ref(q, kt, M, bias)
+    out = landmark_attend(q, kt, M, bias, bq=64, interpret=True)
+    assert out.shape == (S, Dv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,L,Dv", [(130, 10, 24), (512, 32, 16), (9, 5, 8)])
+def test_landmark_stats_fused_vs_ref(S, L, Dv):
+    """ONE fused sweep over S must reproduce both the landmark-row softmax W
+    and the online-softmax Bm·V of the two-pass oracle, on odd (padded)
+    shapes."""
+    Dh = 16
+    ks = jax.random.split(KEY, 4)
+    qt = jax.random.normal(ks[0], (L, Dh))
+    kt = jax.random.normal(ks[1], (L, Dh))
+    k = jax.random.normal(ks[2], (S, Dh))
+    v = jax.random.normal(ks[3], (S, Dv))
+    W_ref, BmV_ref = landmark_stats_ref(qt, kt, k, v)
+    W, BmV = landmark_stats_fused(qt, kt, k, v, bs=64, interpret=True)
+    assert W.shape == (L, L) and BmV.shape == (L, Dv)
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(BmV), np.asarray(BmV_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_landmark_autotune_round_trip(tmp_path, monkeypatch):
+    """Both landmark kernels register in the SAME measured cache as the KRR
+    kernels: a gated eager call measures + persists under its own kind, and
+    the persisted winner is served to later (e.g. traced) lookups."""
+    import json as _json
+
+    from repro.kernels.accum_apply import autotune
+
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(cache))
+    monkeypatch.setenv(autotune.ENV_GATE, "1")
+
+    S, Dh, L, Dv = 128, 16, 8, 8
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (S, Dh))
+    kt = jax.random.normal(ks[1], (L, Dh))
+    M = jax.random.normal(ks[2], (L, Dv))
+    out = landmark_attend(q, kt, M, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(landmark_attention_ref(q, kt, M)),
+        rtol=1e-5, atol=1e-5,
+    )
+    k_seq = jax.random.normal(ks[3], (S, Dh))
+    landmark_stats_fused(kt, kt, k_seq, q[:, :Dv], interpret=True)
+
+    entries = _json.loads(cache.read_text())
+    kinds = {e.split("|")[0] for e in entries}
+    assert {"landmark_attention", "landmark_stats"} <= kinds
+    blocks = autotune.lookup("landmark_attention", (S, Dh, L, Dv), q.dtype, True)
+    assert blocks is not None and len(blocks) == 1
+
+
+def test_accum_attention_use_kernel_routing():
+    """core.accum_attention(use_kernel=True) routes through the Pallas
+    pipeline and matches the plain-XLA path."""
+    B, H, S, Dh = 1, 2, 96, 16
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, S, Dh))
+    k = jax.random.normal(ks[1], (B, H, S, Dh))
+    v = jax.random.normal(ks[2], (B, H, S, Dh))
+    sk = make_seq_sketch(ks[3], S, 16, 4)
+    plain = accum_attention(q, k, v, sk, use_kernel=False)
+    kern = accum_attention(q, k, v, sk, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(kern), rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_decode_attend_kernel_routing():
+    """The decode-path kernel (log-mass correction in the bias lane) matches
+    the plain jnp decode attend, including empty-slot masking."""
+    from repro.core.sketched_attention import (
+        decode_slots,
+        init_sketch_cache,
+        sketch_decode_attend,
+        update_sketch_cache,
+    )
+
+    B, Hkv, G, d_slots, m_r, Dh = 2, 2, 2, 16, 2, 8
+    cache = init_sketch_cache(B, Hkv, d_slots, Dh)
+    for t in range(10):    # 10 tokens → some slots stay empty (mass 0)
+        kk = jax.random.fold_in(KEY, t)
+        k_t = jax.random.normal(kk, (B, Hkv, Dh))
+        v_t = jax.random.normal(jax.random.fold_in(kk, 1), (B, Hkv, Dh))
+        cache = update_sketch_cache(
+            cache, k_t, v_t, decode_slots(KEY, t, d_slots, m_r)
+        )
+    q_t = jax.random.normal(jax.random.fold_in(KEY, 99), (B, G * Hkv, Dh))
+    plain = sketch_decode_attend(q_t, cache, use_kernel=False)
+    kern = sketch_decode_attend(q_t, cache, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(kern), rtol=1e-5, atol=1e-6)
