@@ -1,0 +1,82 @@
+"""CLI gate: ``python -m repro.analysis check``.
+
+Evaluates every contract in ``contracts.toml`` at its pinned probe shape and
+runs the source-level `fold_in` sweep; exits non-zero on any violation.
+
+  check                 evaluate all contracts + the fold_in sweep
+  check --only NAME     one contract (sweep skipped)
+  check --update        re-measure and ratchet `measured_peak_bytes` DOWN
+  check --json PATH     write the full JSON report (the CI artifact)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cmd_check(args) -> int:
+    from repro.analysis import contracts as C
+
+    results, sweep, _ = C.run_check(only=args.only, update=args.update)
+    failed = 0
+    for res in results:
+        mark = {"pass": "ok  ", "skipped": "skip", "fail": "FAIL"}[res.status]
+        peak = res.measured_peak_bytes
+        if peak is not None:
+            extra = f"  peak={peak}B"
+        else:
+            extra = f"  ({res.report.get('reason', '')})"
+        print(f"[{mark}] {res.name}{extra}")
+        for v in res.violations:
+            print(f"       - {v}")
+        failed += res.status == "fail"
+    if args.only is None:
+        bad_sites = [s for s in sweep]
+        if bad_sites:
+            print(f"[FAIL] fold_in sweep: {len(bad_sites)} unregistered "
+                  "site(s)")
+            for s in bad_sites:
+                print(f"       - {s.path}:{s.lineno}: {s.source.strip()}")
+                print("         register a stream in repro.analysis.streams "
+                      "(tag constant or `# rng-stream:` marker)")
+            failed += 1
+        else:
+            print("[ok  ] fold_in sweep: every site registered")
+    if args.json:
+        payload = {
+            "results": [r.to_dict() for r in results],
+            "fold_in_violations": [
+                {"path": str(s.path), "lineno": s.lineno,
+                 "source": s.source.strip()}
+                for s in sweep
+            ],
+            "failed": failed,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, default=str)
+        print(f"report written to {args.json}")
+    if failed:
+        print(f"{failed} violation group(s); see above. "
+              "(`--update` only ratchets budgets DOWN — raising one is a "
+              "reviewed edit to contracts.toml.)")
+    return 1 if failed else 0
+
+
+def main(argv=None) -> int:
+    """Entry point for ``python -m repro.analysis``."""
+    parser = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser("check", help="evaluate all trace contracts")
+    chk.add_argument("--only", default=None, metavar="NAME",
+                     help="evaluate a single contract")
+    chk.add_argument("--update", action="store_true",
+                     help="ratchet measured peaks downward into the manifest")
+    chk.add_argument("--json", default=None, metavar="PATH",
+                     help="write the JSON report artifact")
+    args = parser.parse_args(argv)
+    return _cmd_check(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

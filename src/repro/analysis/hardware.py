@@ -1,0 +1,50 @@
+"""One hardware model shared by the roofline and the trace-contract analyzer.
+
+`launch/analysis.py` used to hardcode TPU v5e peak numbers at module scope, so
+roofline terms and any other consumer of chip constants drifted independently.
+This dataclass is the single source of truth: the roofline divides by its
+bandwidths, and `repro.analysis` contracts can express budgets relative to the
+same chip (e.g. "this entry point must stay under one HBM's worth of
+intermediates").  Override per call site (`HardwareModel(peak_flops=...)`) or
+swap the default with `set_default_hardware` — module-scope constants are
+gone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Per-chip peak numbers used for roofline terms and trace budgets.
+
+    Defaults describe a TPU v5e-class chip: bf16 matmul peak, HBM bandwidth,
+    and per-link ICI bandwidth.  All consumers take an instance (defaulting to
+    `DEFAULT_HARDWARE`) instead of reading module constants, so a v5p/v6e/GPU
+    profile is one constructor call away.
+    """
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link
+    hbm_bytes: float = 16e9         # HBM capacity per chip
+    vmem_bytes: float = 128e6       # on-chip vector memory
+
+
+TPU_V5E = HardwareModel()
+
+DEFAULT_HARDWARE = TPU_V5E
+
+
+def get_default_hardware() -> HardwareModel:
+    """The process-wide default chip profile (used when no override is passed)."""
+    return DEFAULT_HARDWARE
+
+
+def set_default_hardware(hw: HardwareModel) -> HardwareModel:
+    """Swap the process-wide default chip profile; returns the previous one."""
+    global DEFAULT_HARDWARE
+    prev = DEFAULT_HARDWARE
+    DEFAULT_HARDWARE = hw
+    return prev

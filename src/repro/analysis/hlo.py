@@ -1,0 +1,57 @@
+"""Shared HLO-text parsing helpers.
+
+Extracted from `repro.launch.analysis` so the roofline extractor and the
+trace-contract analyzer read compiled artifacts through one parser: dtype
+byte widths, shape-string parsing, and donation-annotation detection.  The
+roofline's full `HloModule` walker stays in `launch/analysis.py` (it is
+roofline-specific); everything both layers need lives here.
+"""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# XLA spells input-output aliasing differently across versions/backends; a
+# donated argument shows up as either attribute in the lowered StableHLO/HLO
+# text.  (The jaxpr itself carries no donation info — only lowering does.)
+DONATION_ATTRS = ("jax.buffer_donor", "tf.aliasing_output")
+
+
+def shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    """All (dtype, dims) groups in an HLO type string (handles tuples)."""
+    out = []
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x.strip()]
+        out.append((dt, d))
+    return out
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total byte size of every shape group in an HLO type string."""
+    total = 0
+    for dt, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def donation_attrs_present(lowered_text: str) -> bool:
+    """True if the lowered module advertises ANY input-output buffer aliasing.
+
+    This is the machine-checkable form of "`donate_argnums` actually took":
+    a jitted wrapper that declares donation but drops it (e.g. because the
+    arguments were captured instead of passed) lowers with neither attribute.
+    """
+    return any(attr in lowered_text for attr in DONATION_ATTRS)

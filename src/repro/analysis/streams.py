@@ -1,0 +1,124 @@
+"""Registry of named RNG streams: every `fold_in` in `src/repro` is accounted for.
+
+PR 8 shipped the bug class this registry exists to kill: two independent
+consumers (decode slot draws and temperature sampling) both derived their
+per-position key as `fold_in(key, pos)` — identical streams, correlated
+draws.  The fix is *tagged* streams (`fold_in(fold_in(key, TAG), pos)`), but
+a fix without a gate regresses: the AST sweep in `repro.analysis.rng`
+inventories every `fold_in` call site under `src/repro` and requires each to
+be either
+
+  * inline-tagged — the fold data is one of the registered tag constants
+    below (by name or by value, `TAG + phase` offsets included), or
+  * marked — the call line (or the line above the statement) carries a
+    ``# rng-stream: <name>`` comment naming a registered stream, for
+    counter-folds (`fold_in(key, step)`) whose independence comes from an
+    upstream tagging fold or from a structurally disjoint base key.
+
+Adding a `fold_in` without registering it fails `python -m repro.analysis
+check`.  Changing any tag VALUE changes draw distributions — that is a seed
+break and must be called out in CHANGES.md (the bitwise-equivalence tests
+pin the current values).
+
+This module is deliberately import-light (no jax): `core/` and `serve/`
+import their tag constants from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# ----------------------------- tag constants ------------------------------ #
+# Values are part of the seed contract: changing one is a seed break.
+
+#: Engine slot-draw stream (sketched decode cache placement).  PR 8 value.
+SLOT_STREAM = 0x510C
+
+#: Engine temperature-sampling stream.  PR 8 value.
+SAMPLE_STREAM = 0x5A3E
+
+#: Holdout-estimator row draws in the adaptive growth drivers.  PR 7 value
+#: (was the inline literal 0x5E1D in `core/apply.py` / `core/distributed.py`).
+HOLDOUT_STREAM = 0x5E1D
+
+#: Leverage-refinement redraw base; phase ``i`` folds ``REFINE_STREAM + i``.
+#: PR 7 value (was the inline literal 0x11E7 in `core/apply.py`).
+REFINE_STREAM = 0x11E7
+
+
+@dataclasses.dataclass(frozen=True)
+class Stream:
+    """One named RNG stream: a tag constant, or a documented counter fold."""
+
+    name: str
+    tag: int | None
+    doc: str
+
+
+#: name → Stream.  Tagged streams carry their fold constant; counter streams
+#: (tag None) are position/step folds whose independence is documented here
+#: and enforced structurally (upstream tagging fold or disjoint base key).
+REGISTRY: dict[str, Stream] = {
+    s.name: s
+    for s in (
+        Stream("serve-slots", SLOT_STREAM,
+               "Engine slot draws: fold_in(key, SLOT_STREAM) once at engine "
+               "init; per-position folds ride the tagged key."),
+        Stream("serve-sample", SAMPLE_STREAM,
+               "Engine temperature sampling: fold_in(key, SAMPLE_STREAM) at "
+               "init, then per-position folds."),
+        Stream("holdout", HOLDOUT_STREAM,
+               "Holdout-estimator draws in grow_sketch_both and the sharded "
+               "twin — disjoint from the slab index draws off the same key."),
+        Stream("refine", REFINE_STREAM,
+               "Leverage tail-refresh redraws: phase i folds REFINE_STREAM+i "
+               "so refreshes never collide with slab or holdout draws."),
+        Stream("slot-position", None,
+               "decode_slots/decode_slot_table: fold_in(key, step). The key "
+               "is the engine's SLOT_STREAM-tagged key (or a caller-owned "
+               "key in tests); the step fold alone is the per-position "
+               "stream."),
+        Stream("sample-position", None,
+               "Engine._sample: fold_in(sample_key, pos) — sample_key is the "
+               "SAMPLE_STREAM-tagged key, so positions are independent of "
+               "the slot draws at the same pos."),
+        Stream("kmeanspp-iter", None,
+               "k-means++ seeding: fold_in(key, i) per center. The base key "
+               "is private to kmeans (split from the caller's key), so the "
+               "counter fold cannot collide with another stream."),
+        Stream("data-step-host", None,
+               "Synthetic data pipeline: fold_in(fold_in(PRNGKey(seed), "
+               "step), host_id) — the nested fold separates hosts within a "
+               "step; the base key is derived from the data seed, not shared "
+               "with model/serve streams."),
+        Stream("compress-step-leaf", None,
+               "Gradient-compression sketches: fold_in(fold_in(key, step), "
+               "i) — per-step, per-leaf resample; key is the optimizer's "
+               "private compression key."),
+        Stream("init-block", None,
+               "Parameter init: fold_in(keys[2], i) per superblock position; "
+               "keys[2] comes from a split, so block streams are disjoint "
+               "from embed/head init."),
+    )
+}
+
+#: Identifier → stream name: the spellings the AST sweep accepts as inline
+#: tags (module-local aliases with a leading underscore included).
+TAG_CONSTANT_TO_STREAM = {
+    "SLOT_STREAM": "serve-slots", "_SLOT_STREAM": "serve-slots",
+    "SAMPLE_STREAM": "serve-sample", "_SAMPLE_STREAM": "serve-sample",
+    "HOLDOUT_STREAM": "holdout", "_HOLDOUT_STREAM": "holdout",
+    "REFINE_STREAM": "refine", "_REFINE_STREAM": "refine",
+}
+
+TAG_CONSTANT_NAMES = frozenset(TAG_CONSTANT_TO_STREAM)
+
+#: Registered tag values (for literal-tag call sites).
+TAG_VALUES = frozenset(s.tag for s in REGISTRY.values() if s.tag is not None)
+
+
+def stream_for_tag(value: int) -> Stream | None:
+    """The registered stream carrying tag `value`, if any."""
+    for s in REGISTRY.values():
+        if s.tag == value:
+            return s
+    return None

@@ -1,0 +1,307 @@
+"""Jaxpr walker producing a `TraceReport`: the trace-contract analyzer's core.
+
+The paper's value proposition is keeping the *effective matrix size* small;
+the invariants that guarantee it — no O(n²) intermediates, one K-pass per
+batch, O(1)-in-chunks jaxprs, donated growth buffers — are properties of the
+*traced program*, not of any particular run.  This module walks a
+`ClosedJaxpr` (recursing into `scan` / `while` / `cond` / `pjit` /
+`pallas_call` sub-jaxprs, with trip-count multipliers for loops — the same
+trick `repro.launch.analysis` plays on compiled HLO) and reports:
+
+  * peak intermediate size (bytes and elements) — the no-quadratic-buffer rule;
+  * a per-dtype buffer census (how many distinct buffers, total bytes);
+  * dot/conv FLOPs, trip-count corrected;
+  * `pallas_call` counts — static (call sites in the trace) and dispatched
+    (× loop trip counts) — the one-K-pass-per-batch rule;
+  * host-sync detection (`pure_callback` / `io_callback` / `debug_callback`):
+    anything that forces the device to round-trip through Python;
+  * donation verification against the *lowered* text (the jaxpr carries no
+    donation info — only lowering does; see `verify_donation`).
+
+The three hand-rolled walkers this library replaced
+(`tests/test_grow_batched.py`, `tests/test_kernels.py`,
+`tests/test_matfree.py`) live on as the compat helpers
+`count_pallas_calls` / `max_intermediate_elems` / `all_shapes`, with one
+planted positive control per test file proving the library still catches the
+regression each hand-rolled copy was written for.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.analysis.hlo import donation_attrs_present
+
+# Primitives that force a host round-trip (device blocks on Python).  The
+# serving and fit hot paths must never contain one — a single callback turns
+# a one-dispatch design back into a host-synced loop.
+HOST_CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "infeed", "outfeed",
+})
+
+# Value-movement primitives whose output aliases/reshapes the input — not
+# "real" intermediates for the dtype census (they'd double-count buffers).
+_VIEW_PRIMITIVES = frozenset({
+    "reshape", "squeeze", "broadcast_in_dim", "convert_element_type",
+    "transpose", "bitcast_convert_type",
+})
+
+
+def _as_jaxpr(j):
+    """Accept a Jaxpr, ClosedJaxpr, or anything wrapping one (duck-typed)."""
+    if hasattr(j, "eqns"):
+        return j
+    if hasattr(j, "jaxpr"):
+        return _as_jaxpr(j.jaxpr)
+    raise TypeError(f"not a jaxpr: {type(j)!r}")
+
+
+def _aval_elems(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) if shape else 1
+
+
+def _aval_bytes(aval) -> int:
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return 0
+    itemsize = getattr(dtype, "itemsize", None)
+    if itemsize is None:        # extended dtypes (PRNG keys): 4-byte words
+        itemsize = 4
+    return _aval_elems(aval) * int(itemsize)
+
+
+def _while_trip_count(eqn) -> float:
+    """Largest integer literal in the loop condition — the `while`-loop
+    trip-count trick from `launch/analysis.py`, transplanted from HLO text to
+    the jaxpr: `fori_loop`/bounded `while_loop` conditions compare the
+    counter against the (constant) bound, so the max literal IS the bound."""
+    cond = eqn.params.get("cond_jaxpr")
+    best = 1
+    if cond is not None:
+        closed = cond if hasattr(cond, "consts") else None
+        inner = _as_jaxpr(cond)
+        for ceqn in inner.eqns:
+            for v in ceqn.invars:
+                val = getattr(v, "val", None)
+                if val is not None and np.ndim(val) == 0:
+                    try:
+                        iv = int(val)
+                    except (TypeError, ValueError):
+                        continue
+                    best = max(best, iv)
+        if closed is not None:
+            for const in closed.consts:
+                if np.ndim(const) == 0:
+                    try:
+                        best = max(best, int(const))
+                    except (TypeError, ValueError):
+                        pass
+    return float(best)
+
+
+def _sub_jaxprs(eqn) -> list[tuple[object, float]]:
+    """(sub_jaxpr, multiplier) pairs for one eqn.  Loop bodies carry their
+    trip count; branches and calls carry 1 (conservative: every branch of a
+    `cond` is charged as if taken)."""
+    name = eqn.primitive.name
+    if name == "scan":
+        length = float(eqn.params.get("length", 1) or 1)
+        return [(eqn.params["jaxpr"], length)]
+    if name == "while":
+        trips = _while_trip_count(eqn)
+        out = []
+        if "cond_jaxpr" in eqn.params:
+            out.append((eqn.params["cond_jaxpr"], trips))
+        if "body_jaxpr" in eqn.params:
+            out.append((eqn.params["body_jaxpr"], trips))
+        return out
+    # generic: anything in params that walks like a jaxpr (pjit, cond
+    # branches, pallas_call, custom_jvp/vjp, remat, shard_map, ...)
+    out = []
+    for param in eqn.params.values():
+        subs = param if isinstance(param, (tuple, list)) else (param,)
+        for sub in subs:
+            if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                out.append((sub, 1.0))
+    return out
+
+
+def _dot_flops(eqn) -> float:
+    """2 · |out| · |contraction| for dot_general / conv (conv approximated
+    by kernel-volume per output element; no conv in this repo's hot paths)."""
+    name = eqn.primitive.name
+    if name == "dot_general":
+        out_elems = sum(_aval_elems(v.aval) for v in eqn.outvars)
+        (lhs_c, _), _ = eqn.params["dimension_numbers"]
+        lhs_shape = getattr(eqn.invars[0].aval, "shape", ())
+        contract = 1
+        for i in lhs_c:
+            if i < len(lhs_shape):
+                contract *= int(lhs_shape[i])
+        return 2.0 * out_elems * contract
+    if name == "conv_general_dilated":
+        out_elems = sum(_aval_elems(v.aval) for v in eqn.outvars)
+        rhs = getattr(eqn.invars[1].aval, "shape", ())
+        out_shape = getattr(eqn.outvars[0].aval, "shape", ())
+        kern = int(np.prod(rhs, dtype=np.int64)) if rhs else 1
+        out_ch = int(out_shape[-1]) if out_shape else 1
+        return 2.0 * out_elems * max(kern // max(out_ch, 1), 1)
+    return 0.0
+
+
+@dataclasses.dataclass
+class TraceReport:
+    """What the analyzer saw in one traced program.
+
+    `peak_bytes`/`peak_elems` are the largest single intermediate bound
+    anywhere in the program (max over loop iterations — a buffer inside a
+    scan is the same buffer each step).  `flops` and `pallas_dispatches` are
+    trip-count corrected; `pallas_calls` and `primitives` are static counts
+    over the trace.  `host_callbacks` lists every host-sync primitive found
+    (empty on a clean device-resident program).
+    """
+
+    peak_bytes: int = 0
+    peak_elems: int = 0
+    peak_shape: tuple = ()
+    peak_dtype: str = ""
+    dtype_census: dict = dataclasses.field(default_factory=dict)
+    flops: float = 0.0
+    pallas_calls: int = 0
+    pallas_dispatches: float = 0.0
+    host_callbacks: list = dataclasses.field(default_factory=list)
+    primitives: dict = dataclasses.field(default_factory=dict)
+    eqn_count: int = 0
+
+    def forbidden(self, names) -> list[str]:
+        """Which of `names` (primitive names) appear in the trace."""
+        return sorted(n for n in names if self.primitives.get(n, 0) > 0)
+
+    def to_dict(self) -> dict:
+        """JSON-ready form (the CI artifact and `--json` output)."""
+        d = dataclasses.asdict(self)
+        d["peak_shape"] = list(self.peak_shape)
+        return d
+
+
+def _walk(jaxpr, mult: float, report: TraceReport) -> None:
+    jaxpr = _as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        report.eqn_count += 1
+        report.primitives[name] = report.primitives.get(name, 0) + 1
+        report.flops += _dot_flops(eqn) * mult
+        if name == "pallas_call":
+            report.pallas_calls += 1
+            report.pallas_dispatches += mult
+        if name in HOST_CALLBACK_PRIMITIVES:
+            report.host_callbacks.append(name)
+        for v in tuple(eqn.invars) + tuple(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is None or getattr(aval, "shape", None) is None:
+                continue
+            elems = _aval_elems(aval)
+            nbytes = _aval_bytes(aval)
+            if nbytes > report.peak_bytes or (
+                nbytes == report.peak_bytes and elems > report.peak_elems
+            ):
+                report.peak_bytes = nbytes
+                report.peak_elems = elems
+                report.peak_shape = tuple(aval.shape)
+                report.peak_dtype = str(aval.dtype)
+            report.peak_elems = max(report.peak_elems, elems)
+        # census: OUTPUT buffers only (each produced value counted once),
+        # views excluded so reshape chains don't double-count
+        if name not in _VIEW_PRIMITIVES:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None or getattr(aval, "shape", None) is None:
+                    continue
+                key = str(getattr(aval, "dtype", "?"))
+                slot = report.dtype_census.setdefault(
+                    key, {"buffers": 0, "bytes": 0})
+                slot["buffers"] += 1
+                slot["bytes"] += _aval_bytes(aval)
+        for sub, factor in _sub_jaxprs(eqn):
+            _walk(sub, mult * factor, report)
+
+
+def report_from_jaxpr(jaxpr) -> TraceReport:
+    """Walk an already-traced Jaxpr/ClosedJaxpr into a `TraceReport`."""
+    report = TraceReport()
+    _walk(jaxpr, 1.0, report)
+    return report
+
+
+def trace_report(fn, *args, **kwargs) -> TraceReport:
+    """Trace `fn(*args, **kwargs)` with `jax.make_jaxpr` and analyze it."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return report_from_jaxpr(closed)
+
+
+# --------------------------------------------------------------------------- #
+# compat helpers — the three hand-rolled test walkers, now library calls
+# --------------------------------------------------------------------------- #
+
+def count_pallas_calls(jaxpr) -> int:
+    """Static `pallas_call` count, recursing into every sub-jaxpr.
+
+    This is the one-K-pass-per-batch detector: a batched growth trace binds
+    ONE pallas_call where B sequential steps bind B.
+    """
+    return report_from_jaxpr(jaxpr).pallas_calls
+
+
+def max_intermediate_elems(jaxpr) -> int:
+    """Largest array (element count) bound anywhere in the traced program.
+
+    The no-quadratic-buffer detector: the matrix-free paths must never bind
+    a buffer within an order of magnitude of n² (scalars count as 1).
+    """
+    return report_from_jaxpr(jaxpr).peak_elems
+
+
+def peak_intermediate_bytes(jaxpr) -> int:
+    """Largest single intermediate in BYTES (dtype-aware `max_intermediate_elems`)."""
+    return report_from_jaxpr(jaxpr).peak_bytes
+
+
+def all_shapes(jaxpr) -> set:
+    """Every distinct array shape bound in the trace (recursive).
+
+    `tests/test_kernels.py`'s detector for layout regressions: e.g. the left
+    sketch kernel must never bind a transposed (c, N) copy of its input.
+    """
+    shapes: set = set()
+
+    def walk(j):
+        j = _as_jaxpr(j)
+        for eqn in j.eqns:
+            for v in tuple(eqn.invars) + tuple(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                shape = getattr(aval, "shape", None)
+                if shape is not None:
+                    shapes.add(tuple(shape))
+            for sub, _ in _sub_jaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
+    return shapes
+
+
+def verify_donation(lowered) -> bool:
+    """True if a lowered computation really advertises buffer donation.
+
+    Accepts a `jax.stages.Lowered` (or anything with `.as_text()`) or the
+    lowered text itself.  A wrapper that declares `donate_argnums` but whose
+    lowering lost the aliasing (captured args, donation under an outer trace)
+    returns False — the dropped-donation bug class.
+    """
+    text = lowered if isinstance(lowered, str) else lowered.as_text()
+    return donation_attrs_present(text)

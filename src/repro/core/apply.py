@@ -31,6 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.streams import HOLDOUT_STREAM as _HOLDOUT_STREAM
+from repro.analysis.streams import REFINE_STREAM as _REFINE_STREAM
 from repro.core.sketch import AccumSketch, AccumState, make_accum_sketch
 from repro.util import env_flag
 
@@ -586,7 +588,8 @@ def make_leverage_refine(key: jax.Array, *, lam: float, mix: float = 0.1,
 
     def refine(state: AccumState, phase: int) -> AccumState:
         p_new = SCH.state_leverage_probs(state, lam, mix=mix)
-        return SCH.refresh_tail(state, jax.random.fold_in(key, 0x11E7 + phase),
+        return SCH.refresh_tail(state,
+                                jax.random.fold_in(key, _REFINE_STREAM + phase),
                                 p_new, signed=signed)
 
     return refine
@@ -756,7 +759,8 @@ def grow_sketch_both(
             passes = jnp.full((), len(sched), jnp.int32)
     else:
         if estimator is None:
-            estimator = make_holdout_estimator(jax.random.fold_in(key, 0x5E1D), K)
+            estimator = make_holdout_estimator(
+                jax.random.fold_in(key, _HOLDOUT_STREAM), K)
         if schedule == "doubling":
             state, passes = accum_grow_doubling(
                 K, state, tol=tol, estimator=estimator, use_kernel=use_kernel,

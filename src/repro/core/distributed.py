@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.streams import HOLDOUT_STREAM as _HOLDOUT_STREAM
 from repro.core import apply as A
 from repro.core.kernel_op import (
     KernelOperator,
@@ -645,7 +646,7 @@ def sharded_grow_sketch_both(
     else:
         if estimator is None:
             estimator = make_sharded_holdout_estimator(
-                jax.random.fold_in(key, 0x5E1D), op, mesh)
+                jax.random.fold_in(key, _HOLDOUT_STREAM), op, mesh)
         if schedule == "doubling":
             state, passes = sharded_accum_grow_doubling(
                 op, state, mesh, tol=tol, estimator=estimator,

@@ -372,7 +372,7 @@ def decode_slots(
     if max_len is not None and max_len <= d_slots:
         pos = jnp.asarray(step, jnp.int32) % jnp.int32(d_slots)
         return jnp.full((m_r,), pos, jnp.int32)
-    k = jax.random.fold_in(key, step)
+    k = jax.random.fold_in(key, step)  # rng-stream: slot-position
     if scheme == "uniform":
         return jax.random.randint(k, (m_r,), 0, d_slots)
     u = jax.random.uniform(k, (d_slots,))

@@ -118,7 +118,8 @@ def _kmeanspp_init(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
     def body(i, carry):
         centers, d2min = carry
         p = d2min / jnp.maximum(jnp.sum(d2min), 1e-30)
-        nxt = jax.random.choice(jax.random.fold_in(key, i), n, p=p)
+        nxt = jax.random.choice(  # rng-stream: kmeanspp-iter
+            jax.random.fold_in(key, i), n, p=p)
         centers = centers.at[i].set(X[nxt])
         d2min = jnp.minimum(d2min, jnp.sum((X - X[nxt][None, :]) ** 2, axis=1))
         return centers, d2min

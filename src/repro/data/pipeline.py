@@ -46,7 +46,7 @@ def host_batch(cfg: DataConfig, step: int) -> tuple[np.ndarray, np.ndarray]:
     (global_batch / n_hosts, seq_len)."""
     assert cfg.global_batch % cfg.n_hosts == 0
     per_host = cfg.global_batch // cfg.n_hosts
-    key = jax.random.fold_in(
+    key = jax.random.fold_in(  # rng-stream: data-step-host
         jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), cfg.host_id
     )
     block = _token_block(key, cfg, (per_host, cfg.seq_len + 1))

@@ -16,24 +16,32 @@ the compiled HLO text with trip-count multipliers:
   * collective bytes: result-shape bytes × ring factor (all-reduce 2×).
 
 Terms (per chip — the SPMD module is the per-partition program):
-  compute    = FLOPs / 197e12        memory = bytes / 819e9
-  collective = coll_bytes / 50e9
+  compute    = FLOPs / hw.peak_flops     memory = bytes / hw.hbm_bw
+  collective = coll_bytes / hw.ici_bw
+
+The chip numbers live in `repro.analysis.hardware.HardwareModel` (default:
+TPU v5e-class) — `Roofline` carries the model it was scored against, and
+`set_default_hardware` swaps the target chip process-wide.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
 
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e-class)
-HBM_BW = 819e9               # B/s per chip
-ICI_BW = 50e9                # B/s per link
+from repro.analysis.hardware import (
+    TPU_V5E,
+    HardwareModel,
+    get_default_hardware,
+)
+from repro.analysis.hlo import DTYPE_BYTES as _DTYPE_BYTES
+from repro.analysis.hlo import shape_bytes as _shape_bytes
+from repro.analysis.hlo import shape_dims as _shape_dims
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
+# Backwards-compatible aliases for the historical module constants; the
+# overridable source of truth is repro.analysis.hardware.
+PEAK_FLOPS = TPU_V5E.peak_flops      # bf16 FLOP/s per chip (TPU v5e-class)
+HBM_BW = TPU_V5E.hbm_bw              # B/s per chip
+ICI_BW = TPU_V5E.ici_bw              # B/s per link
 
 _COLLECTIVE_FACTOR = {
     "all-gather": 1.0, "all-gather-start": 1.0,
@@ -43,7 +51,6 @@ _COLLECTIVE_FACTOR = {
     "collective-permute": 1.0, "collective-permute-start": 1.0,
 }
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))\s*->")
 _INSTR = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+([\w\-]+)\((.*)$"
@@ -59,27 +66,6 @@ def _call_targets(rest: str) -> list[str]:
         out.extend(re.findall(r"[\w.\-]+", m.group(1)))
     return out
 _CONST_INT = re.compile(r"constant\((\d+)\)")
-
-
-def _shape_dims(type_str: str):
-    """All (dtype, dims) groups in a type string (handles tuples)."""
-    out = []
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        d = [int(x) for x in dims.split(",") if x.strip()]
-        out.append((dt, d))
-    return out
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _shape_dims(type_str):
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * _DTYPE_BYTES[dt]
-    return total
 
 
 @dataclasses.dataclass
@@ -392,18 +378,26 @@ class Roofline:
     peak_mem_bytes: float        # per-chip peak allocation (memory_analysis)
     xla_flops: float = 0.0       # raw cost_analysis (uncorrected, for reference)
     xla_bytes: float = 0.0
+    hardware: HardwareModel | None = None   # None → process default
+
+    @property
+    def hw(self) -> HardwareModel:
+        """The chip model this roofline is scored against."""
+        if self.hardware is not None:
+            return self.hardware
+        return get_default_hardware()
 
     @property
     def t_compute(self) -> float:
-        return self.flops / PEAK_FLOPS
+        return self.flops / self.hw.peak_flops
 
     @property
     def t_memory(self) -> float:
-        return self.hbm_bytes / HBM_BW
+        return self.hbm_bytes / self.hw.hbm_bw
 
     @property
     def t_collective(self) -> float:
-        return self.coll_bytes / ICI_BW
+        return self.coll_bytes / self.hw.ici_bw
 
     @property
     def dominant(self) -> str:
@@ -427,10 +421,11 @@ class Roofline:
             "t_compute": self.t_compute, "t_memory": self.t_memory,
             "t_collective": self.t_collective, "dominant": self.dominant,
             "roofline_fraction": self.compute_fraction(),
+            "hardware": self.hw.name,
         }
 
 
-def analyze(compiled) -> Roofline:
+def analyze(compiled, hardware: HardwareModel | None = None) -> Roofline:
     cost = compiled.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]
@@ -448,6 +443,7 @@ def analyze(compiled) -> Roofline:
         peak_mem_bytes=peak,
         xla_flops=float(cost.get("flops", 0.0)),
         xla_bytes=float(cost.get("bytes accessed", 0.0)),
+        hardware=hardware,
     )
 
 

@@ -68,7 +68,7 @@ def init_params(key, cfg: ModelConfig) -> Params:
     for i, kind in enumerate(cfg.pattern):
         if kind == "attn_shared":
             continue
-        kinit = jax.random.fold_in(keys[2], i)
+        kinit = jax.random.fold_in(keys[2], i)  # rng-stream: init-block
         sb_keys = jax.random.split(kinit, cfg.n_superblocks)
         blocks[f"pos{i}"] = jax.vmap(lambda k: _init_block(k, kind, cfg))(sb_keys)
     params["blocks"] = blocks

@@ -71,7 +71,7 @@ def compress_grads(
             continue
         p = g.shape[0]
         d = max(int(p * cfg.ratio), 1)
-        sk = make_accum_sketch(
+        sk = make_accum_sketch(  # rng-stream: compress-step-leaf
             jax.random.fold_in(jax.random.fold_in(key, step), i), p, d, cfg.m
         )
         gf = g.astype(jnp.float32).reshape(p, -1) + e.reshape(p, -1)

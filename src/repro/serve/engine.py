@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.streams import SAMPLE_STREAM as _SAMPLE_STREAM
+from repro.analysis.streams import SLOT_STREAM as _SLOT_STREAM
 from repro.configs.base import ModelConfig
 from repro.core.sketched_attention import decode_slot_table, decode_slots
 from repro.models.model import (
@@ -39,10 +41,9 @@ from repro.models.model import (
 
 PyTree = Any
 
-# distinct fold_in tags so slot draws and sampling draws are independent
-# streams off the same seed (both are then folded with the position counter)
-_SLOT_STREAM = 0x510C
-_SAMPLE_STREAM = 0x5A3E
+# distinct fold_in tags (registered in repro.analysis.streams) so slot draws
+# and sampling draws are independent streams off the same seed (both are then
+# folded with the position counter)
 
 
 @dataclasses.dataclass
@@ -166,5 +167,5 @@ class Engine:
     def _sample(self, logits: jax.Array, pos) -> jax.Array:
         if self.sc.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(self._sample_key, pos)
+        k = jax.random.fold_in(self._sample_key, pos)  # rng-stream: sample-position
         return jax.random.categorical(k, logits / self.sc.temperature).astype(jnp.int32)

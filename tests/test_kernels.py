@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.trace import all_shapes
 from repro.core.sketch import make_accum_sketch
 from repro.core.sketched_attention import accum_attention, make_seq_sketch
 from repro.kernels.accum_apply.ops import (
@@ -167,23 +168,12 @@ def test_sketch_left_kernel_never_transposes_M():
     sk = make_accum_sketch(jax.random.fold_in(KEY, 77), N, 12, 3)
     M = jax.random.normal(KEY, (N, c), jnp.float32)
 
-    def all_shapes(jaxpr, acc):
-        for eqn in jaxpr.eqns:
-            for v in tuple(eqn.invars) + tuple(eqn.outvars):
-                shape = getattr(getattr(v, "aval", None), "shape", None)
-                if shape is not None:
-                    acc.add(tuple(shape))
-            for param in eqn.params.values():
-                subs = param if isinstance(param, (tuple, list)) else (param,)
-                for sub in subs:
-                    if hasattr(sub, "eqns"):
-                        all_shapes(sub, acc)
-                    elif hasattr(sub, "jaxpr"):
-                        all_shapes(sub.jaxpr, acc)
-        return acc
-
+    # shape walker now shared via repro.analysis.trace; the (c, N) assertion
+    # is this file's planted positive-control target — M itself is (N, c), so
+    # the detector must prove the transposed layout is ABSENT, not just small
     shapes = all_shapes(jax.make_jaxpr(
-        lambda M: sketch_left_kernel(sk, M))(M).jaxpr, set())
+        lambda M: sketch_left_kernel(sk, M))(M).jaxpr)
+    assert (N, c) in {s[:2] for s in shapes if len(s) >= 2}  # detector sees M
     assert not any(s[:2] == (c, N) for s in shapes if len(s) >= 2), shapes
 
 

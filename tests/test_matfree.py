@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.trace import max_intermediate_elems
 from repro.core import apply as A
 from repro.core.kernel_op import DENSE_GUARD_N, KernelOperator
 from repro.core.kernels_math import get_kernel
@@ -117,24 +118,10 @@ def test_golden_dense_equals_matfree_f64_cpu(kernel, bw, nu):
 # jaxpr regression: no n×n intermediate on the matrix-free path
 # --------------------------------------------------------------------------- #
 
-def _max_intermediate_elems(jaxpr) -> int:
-    """Largest array (element count) bound anywhere in the traced program,
-    recursing into scan/cond/pjit sub-jaxprs (duck-typed, version-proof)."""
-    best = 0
-    for eqn in jaxpr.eqns:
-        for v in tuple(eqn.invars) + tuple(eqn.outvars):
-            aval = getattr(v, "aval", None)
-            shape = getattr(aval, "shape", None)
-            if shape is not None:
-                best = max(best, int(np.prod(shape, dtype=np.int64)) if shape else 1)
-        for param in eqn.params.values():
-            subs = param if isinstance(param, (tuple, list)) else (param,)
-            for sub in subs:
-                if hasattr(sub, "eqns"):
-                    best = max(best, _max_intermediate_elems(sub))
-                elif hasattr(sub, "jaxpr"):
-                    best = max(best, _max_intermediate_elems(sub.jaxpr))
-    return best
+# the hand-rolled walker this file used to carry now lives in
+# repro.analysis.trace — the dense-path n² assertion below stays as the
+# positive control proving the shared detector still sees the big buffer
+_max_intermediate_elems = max_intermediate_elems
 
 
 def test_matfree_path_has_no_nxn_intermediate():
