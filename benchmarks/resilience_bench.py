@@ -1,0 +1,240 @@
+"""Resilience-layer bench: what the safety net costs when nothing is failing.
+
+Three claims, measured:
+
+  * GUARDS — the fault-site + degradation-ladder wrappers on the kernel hot
+    path (`sketch_both` with `use_kernel=True`) and the in-graph solve ladder
+    (`solve_psd_ladder` vs a bare single-attempt Cholesky) at the
+    ``BENCH_kernels.json`` anchor shape.  Acceptance: < 5% overhead — the
+    guards are a dict lookup + a counter when no plan is armed, and the solve
+    ladder's `while_loop` never iterates on healthy input.
+  * CKPT — `ckpt.save` / `ckpt.restore` wall-clock across a state-size ladder
+    (the atomic tmp-write + rename + msgpack encode cost per MB).
+  * RESUME — `Engine.generate` resumed from a mid-request checkpoint vs the
+    same request cold (prefill + full decode): the payoff side of the
+    checkpoint ledger.
+
+Run:   PYTHONPATH=src python -m benchmarks.run resilience
+Smoke: PYTHONPATH=src python -m benchmarks.run resilience --smoke
+
+Writes ``BENCH_resilience.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.checkpoint import ckpt
+from repro.configs import get_config, reduced
+from repro.core import apply as A
+from repro.core.sketch import make_accum_sketch
+from repro.kernels.accum_apply.ops import sketch_both_kernel
+from repro.models.model import init_params
+from repro.resilience import faults
+from repro.resilience.degrade import ladder_call, solve_psd_ladder
+from repro.serve.engine import Engine, ServeConfig
+from repro.util import env_flag
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = REPO_ROOT / "BENCH_resilience.json"
+
+# guard shapes match BENCH_kernels.json's anchor so the < 5% acceptance is
+# checked where the kernel numbers live; ckpt sizes in MB of f32 state
+FULL = dict(n=4096, d=64, m=4, solve_d=512, ckpt_mb=[1, 16, 64],
+            L=32, n_new=16, ckpt_every=4, batch=2)
+SMOKE = dict(n=256, d=16, m=2, solve_d=64, ckpt_mb=[1],
+             L=8, n_new=6, ckpt_every=2, batch=2)
+
+
+def bench_config() -> tuple[dict, int]:
+    """(shape dict, reps) — smoke honors REPRO_BENCH_SMOKE like every suite."""
+    if env_flag("REPRO_BENCH_SMOKE", False):
+        return SMOKE, 1
+    return FULL, 3
+
+
+def bench_guards(results: dict, shapes: dict, reps: int) -> None:
+    """Fault-site + ladder wrapper cost on the kernel hot path, and the
+    in-graph solve ladder vs a bare Cholesky, at the kernels anchor shape."""
+    n, d, m = shapes["n"], shapes["d"], shapes["m"]
+    key = jax.random.PRNGKey(0)
+    X = jax.random.uniform(jax.random.PRNGKey(1), (n, 8))
+    K = jnp.exp(-((X[:, None, :] - X[None, :, :]) ** 2).sum(-1) / 0.5)
+    sk = make_accum_sketch(key, n, d, m)
+
+    # overhead is a small difference of two timings — take more reps than the
+    # suite default so interpret-mode jitter doesn't swamp it
+    g_reps = max(reps, 5)
+    faults.reset()
+    t_guarded = timeit(
+        lambda: A.sketch_both(K, sk, use_kernel=True), reps=g_reps, warmup=1
+    )
+    # the same rung with the resilience machinery stubbed out — the pre-layer
+    # baseline the < 5% acceptance is measured against
+    orig = faults.fault_point
+    faults.fault_point = lambda site: None
+    try:
+        t_bare = timeit(
+            lambda: sketch_both_kernel(K, sk), reps=g_reps, warmup=1
+        )
+    finally:
+        faults.fault_point = orig
+    over_kernel = t_guarded / t_bare - 1.0
+
+    sd = shapes["solve_d"]
+    Am = jax.random.uniform(jax.random.PRNGKey(2), (sd, sd))
+    M = Am @ Am.T / sd + jnp.eye(sd)
+    b = jnp.ones((sd,))
+    ladder = jax.jit(lambda M, b: solve_psd_ladder(M, b)[0])
+
+    def bare_solve(M, b):
+        from jax.scipy.linalg import cho_factor, cho_solve
+
+        j0 = 1e-8 * (jnp.trace(M) / sd + 1e-30)
+        return cho_solve(cho_factor(M + j0 * jnp.eye(sd), lower=True), b)
+
+    bare = jax.jit(bare_solve)
+    t_ladder = timeit(lambda: ladder(M, b), reps=g_reps, warmup=1)
+    t_solve = timeit(lambda: bare(M, b), reps=g_reps, warmup=1)
+    over_solve = t_ladder / t_solve - 1.0
+
+    # the wrapper in isolation, amortized over an empty thunk — the absolute
+    # per-dispatch floor (µs), independent of how big the kernel is
+    z = jnp.zeros(())
+    t_wrap = timeit(
+        lambda: ladder_call("kernel.dispatch", (("noop", lambda: z),)),
+        reps=max(reps, 3), warmup=1,
+    )
+
+    results["guards"] = {
+        "kernel_anchor": {"n": n, "d": d, "m": m},
+        "kernel_guarded_s": t_guarded, "kernel_bare_s": t_bare,
+        "kernel_overhead_frac": over_kernel,
+        "solve_d": sd, "solve_ladder_s": t_ladder, "solve_bare_s": t_solve,
+        "solve_overhead_frac": over_solve,
+        "ladder_call_floor_s": t_wrap,
+    }
+    emit("resilience_guard_kernel", t_guarded * 1e6,
+         f"overhead={over_kernel * 100:.2f}%")
+    emit("resilience_guard_solve", t_ladder * 1e6,
+         f"overhead={over_solve * 100:.2f}%")
+    emit("resilience_ladder_floor", t_wrap * 1e6, "empty thunk")
+
+
+def bench_ckpt(results: dict, shapes: dict, reps: int) -> None:
+    """save/restore latency across a state-size ladder (atomic write + msgpack
+    encode per MB)."""
+    rows: dict = {}
+    for mb in shapes["ckpt_mb"]:
+        n_f32 = mb * (1 << 20) // 4
+        tree = {
+            "a": jnp.arange(n_f32 // 2, dtype=jnp.float32),
+            "b": {"c": jnp.ones((n_f32 // 2,), jnp.bfloat16),
+                  "step": jnp.int32(7)},
+        }
+        with tempfile.TemporaryDirectory() as td:
+            t_save = timeit(
+                lambda s=iter(range(10 ** 6)): ckpt.save(
+                    td, tree, step=next(s), keep_last=2
+                ),
+                reps=reps, warmup=1,
+            )
+            t_restore = timeit(
+                lambda: ckpt.restore(td, tree)[0], reps=reps, warmup=1
+            )
+        rows[f"{mb}MB"] = {"save_s": t_save, "restore_s": t_restore}
+        emit("resilience_ckpt_save", t_save * 1e6, f"state={mb}MB")
+        emit("resilience_ckpt_restore", t_restore * 1e6, f"state={mb}MB")
+    results["ckpt"] = rows
+
+
+def bench_resume(results: dict, shapes: dict, reps: int) -> None:
+    """Resumed generate (from the mid-request snapshot) vs the same request
+    cold — what a preemption costs with and without the checkpoint.
+
+    Each timed run gets a fresh copy of the pristine mid-request directory
+    (resuming writes new checkpoints, so reusing one directory would make the
+    second rep a no-op) and a fresh Engine — a resumed process pays its own
+    trace/compile either way, so cold runs use fresh engines too."""
+    cfg = reduced(get_config("stablelm-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, L, n_new = shapes["batch"], shapes["L"], shapes["n_new"]
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, cfg.vocab_size)
+    )
+
+    def engine(ckdir):
+        sc = ServeConfig(
+            max_len=L + n_new + 2, use_sketch=True, temperature=0.7, seed=3,
+            ckpt_dir=ckdir, ckpt_every=shapes["ckpt_every"],
+        )
+        return Engine(cfg, params, sc)
+
+    def once(fn) -> float:
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as td:
+        # write the checkpoint trail once, then keep only a mid-request step
+        pristine = pathlib.Path(td) / "pristine"
+        engine(str(pristine)).generate(prompts, n_new, request_id="r")
+        req = pristine / "r"
+        steps = ckpt.committed_steps(req)
+        mid = steps[len(steps) // 2]
+        for s in steps:
+            if s != mid:
+                shutil.rmtree(ckpt._step_dir(str(req), s))
+
+        t_res = []
+        for i in range(reps):
+            work = pathlib.Path(td) / f"run{i}"
+            shutil.copytree(pristine, work)
+            t_res.append(once(
+                lambda w=work: engine(str(w)).generate(
+                    prompts, n_new, request_id="r")))
+        t_resume = float(np.median(t_res))
+    t_cold = float(np.median(
+        [once(lambda: engine(None).generate(prompts, n_new))
+         for _ in range(reps)]))
+    results["resume"] = {
+        "L": L, "n_new": n_new, "resume_from_step": int(mid),
+        "resume_s": t_resume, "cold_s": t_cold,
+        "speedup": t_cold / t_resume,
+    }
+    emit("resilience_resume", t_resume * 1e6,
+         f"from step {mid}, {t_cold / t_resume:.2f}x vs cold")
+    emit("resilience_cold", t_cold * 1e6, f"L={L} n_new={n_new}")
+
+
+def main() -> None:
+    """Entry point for ``benchmarks.run resilience``."""
+    shapes, reps = bench_config()
+    results: dict = {}
+    bench_guards(results, shapes, reps)
+    bench_ckpt(results, shapes, reps)
+    bench_resume(results, shapes, reps)
+    payload = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+        },
+        "config": shapes,
+        "smoke": env_flag("REPRO_BENCH_SMOKE", False),
+        "results": results,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("bench_json", 0.0, f"wrote {BENCH_PATH.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,10 @@ the sampling-scheme zoo's error-vs-m curves (uniform / leverage / poisson on
 the KRR anchor) live in ``BENCH_schemes.json``; the serving-layer numbers —
 batched-vs-sequential prefill at the 4k anchor plus exact-vs-sketched decode
 tokens/s and cache bytes across a 4k → 512k context ladder — live in
-``BENCH_attention.json``.
+``BENCH_attention.json``; the resilience-layer numbers — fault-guard /
+degradation-ladder overhead on the kernel hot path (< 5% acceptance),
+checkpoint save/restore latency vs state size, and resumed-vs-cold generate —
+live in ``BENCH_resilience.json``.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 amm   # subset
@@ -34,8 +37,8 @@ import traceback
 from benchmarks import amm_bench, attention_bench, distributed_bench
 from benchmarks import falkon_bench, fig1_toy
 from benchmarks import fig2_approx_error, fig3_tradeoff, grow_bench
-from benchmarks import kernel_bench, matfree_bench, roofline, schemes_bench
-from benchmarks import train_bench
+from benchmarks import kernel_bench, matfree_bench, resilience_bench
+from benchmarks import roofline, schemes_bench, train_bench
 
 SUITES = {
     "fig1": fig1_toy.main,          # paper Fig. 1 (toy tradeoff)
@@ -49,6 +52,7 @@ SUITES = {
     "schemes": schemes_bench.main,  # sampling-scheme zoo: error vs m
     "attention": attention_bench.main,  # serving: prefill speedup + decode ladder
     "distributed": distributed_bench.main,  # sharded (C, W): weak/strong scaling
+    "resilience": resilience_bench.main,  # guard overhead + ckpt/resume latency
     "train": train_bench.main,      # end-to-end step throughput
     "roofline": roofline.main,      # dry-run roofline table
 }

@@ -310,6 +310,32 @@ def _build_engine_decode(probe):
     )
 
 
+def _build_engine_decode_degraded(probe):
+    # the exact-attention rung a sketched engine degrades to after its health
+    # screen trips: same engine, use_sketch=False override + an exact cache.
+    # The contract pins that the degraded path is as clean as the primary one
+    # (no host syncs, no pallas, straight RNG lineage).
+    cfg, params, eng = _serve_setup(probe, use_sketch=True)
+    B, L, steps = probe["B"], probe["L"], probe["steps"]
+    cache = eng.new_cache(B, use_sketch=False)
+    tok0 = jnp.zeros((B,), jnp.int32)
+    return Target(
+        lambda p, c, t: eng._decode_scan(p, c, t, jnp.int32(L),
+                                         n_steps=steps, use_sketch=False),
+        (params, cache, tok0),
+    )
+
+
+def _build_solve_psd_ladder(probe):
+    from repro.resilience.degrade import solve_psd_ladder
+
+    d = probe["d"]
+    A = jax.random.uniform(jax.random.PRNGKey(1), (d, d))
+    M = A @ A.T / d + jnp.eye(d)
+    b = jnp.ones((d,))
+    return Target(lambda M, b: solve_psd_ladder(M, b), (M, b))
+
+
 def _build_sharded_sketch_both(probe):
     from repro.core import apply as A
     from repro.core import distributed as D
@@ -355,6 +381,8 @@ ENTRY_POINTS = {
     "spectral_cluster": _build_spectral_cluster,
     "prefill_with_cache": _build_prefill,
     "engine_decode": _build_engine_decode,
+    "engine_decode_degraded": _build_engine_decode_degraded,
+    "solve_psd_ladder": _build_solve_psd_ladder,
     "sharded_sketch_both": _build_sharded_sketch_both,
     "sharded_grow_sketch_both": _build_sharded_grow_sketch_both,
 }

@@ -1,12 +1,29 @@
 """Fault-tolerant checkpointing: msgpack + atomic rename + retained history +
 async writer thread.
 
-Layout: <dir>/step_<n>/state.msgpack (+ .meta.json), written to a tmp path and
+Layout: <dir>/step_<n>/state.msgpack (+ meta.json), written to a tmp path and
 os.rename'd (atomic on POSIX) so a preemption mid-write never corrupts the
 latest checkpoint. `latest_step()` only trusts directories with the COMMIT
-marker. Arrays are stored host-unsharded (fetched with jax.device_get), so a
-restarted job with a *different mesh shape* can reshard on load — elastic
-scaling across restarts.
+marker, and by default sweeps stale `.tmp` / uncommitted directories left by
+mid-write kills. Arrays are stored host-unsharded (fetched with
+jax.device_get), so a restarted job with a *different mesh shape* can reshard
+on load — elastic scaling across restarts.
+
+Resilience behavior (see docs/resilience.md):
+
+* `save()` retries the tmp-write + rename with exponential backoff (transient
+  I/O errors), EXCEPT on a (simulated) device loss, which propagates
+  untouched — a killed process neither retries nor cleans up; the stale tmp
+  dir it leaves is removed by the next `sweep_stale()`.
+* `restore(step=None)` walks committed steps newest-first and falls back past
+  a corrupt payload to step N−1, recording the skip in the global
+  HealthReport.
+* `AsyncCheckpointer` captures writer-thread exceptions and re-raises them on
+  the next `save()` / `wait()` / `close()` instead of dying silently.
+
+The `ckpt.write` fault site (REPRO_FAULT_PLAN) can corrupt/truncate the
+payload of one write attempt or kill it mid-stream, so all of the above is
+exercised by tests/test_resilience.py rather than only in prose.
 """
 from __future__ import annotations
 
@@ -14,12 +31,15 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from repro.resilience import faults
 
 PyTree = Any
 _COMMIT = "COMMITTED"
@@ -48,83 +68,175 @@ def _decode_leaf(d: dict) -> np.ndarray:
     return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
 
 
-def save(path: str, tree: PyTree, *, step: int, extra: dict | None = None) -> str:
-    """Synchronous atomic save. Returns the committed directory."""
-    final = os.path.join(path, f"step_{step:08d}")
-    tmp = final + ".tmp"
+def _step_dir(path: str, step: int) -> str:
+    return os.path.join(path, f"step_{step:08d}")
+
+
+def _write_attempt(tmp: str, final: str, payload: bytes, meta: dict) -> None:
     os.makedirs(tmp, exist_ok=True)
-    leaves, treedef = _flatten(tree)
-    payload = msgpack.packb(
-        {"leaves": [_encode_leaf(x) for x in leaves]}, use_bin_type=True
-    )
-    with open(os.path.join(tmp, "state.msgpack"), "wb") as f:
-        f.write(payload)
-    meta = {"step": step, "treedef": str(treedef), "extra": extra or {}}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    # Fault site: a "kill" here dies after meta but before state — exactly the
+    # partial tmp dir a preemption leaves; "corrupt"/"truncate" mangle the
+    # committed payload (the corrupt-latest fallback's target).
+    payload = faults.corrupt("ckpt.write", payload)
+    with open(os.path.join(tmp, "state.msgpack"), "wb") as f:
+        f.write(payload)
     with open(os.path.join(tmp, _COMMIT), "w") as f:
         f.write("ok")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+
+
+def save(
+    path: str,
+    tree: PyTree,
+    *,
+    step: int,
+    extra: dict | None = None,
+    keep_last: int | None = None,
+    retries: int = 3,
+    backoff: float = 0.05,
+) -> str:
+    """Atomic save with retry-with-backoff. Returns the committed directory.
+
+    Transient write errors are retried up to `retries` times (backoff
+    doubling from `backoff` seconds); a DeviceLost propagates immediately.
+    When `keep_last` is given, older committed steps are garbage-collected
+    after the commit."""
+    final = _step_dir(path, step)
+    tmp = final + ".tmp"
+    leaves, treedef = _flatten(tree)
+    payload = msgpack.packb(
+        {"leaves": [_encode_leaf(x) for x in leaves]}, use_bin_type=True
+    )
+    meta = {"step": step, "treedef": str(treedef), "extra": extra or {}}
+    for attempt in range(max(1, retries)):
+        try:
+            _write_attempt(tmp, final, payload, meta)
+            break
+        except faults.DeviceLost:
+            raise  # simulated preemption: no cleanup, no retry
+        except Exception:
+            if attempt >= max(1, retries) - 1:
+                raise
+            time.sleep(backoff * (2**attempt))
+    if keep_last is not None:
+        retain(path, keep_last)
     return final
 
 
-def restore(path: str, like: PyTree, *, step: int | None = None) -> tuple[PyTree, int]:
-    """Restore into the structure of `like` (resharding happens when the caller
-    device_puts with its own shardings). Returns (tree, step)."""
-    if step is None:
-        step = latest_step(path)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint under {path}")
-    d = os.path.join(path, f"step_{step:08d}")
+def _restore_step(path: str, like: PyTree, step: int) -> PyTree:
+    d = _step_dir(path, step)
     with open(os.path.join(d, "state.msgpack"), "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     leaves = [_decode_leaf(x) for x in payload["leaves"]]
     _, treedef = _flatten(like)
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def latest_step(path: str) -> int | None:
+def restore(path: str, like: PyTree, *, step: int | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of `like` (resharding happens when the caller
+    device_puts with its own shardings). Returns (tree, step).
+
+    With `step=None` the newest committed checkpoint is loaded, falling back
+    step-by-step past corrupt/undecodable payloads; each skip is recorded in
+    the global HealthReport (site "ckpt.restore" is informational — the data
+    loss already happened at write time)."""
+    if step is not None:
+        return _restore_step(path, like, step), step
+    steps = committed_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint under {path}")
+    last_err: Exception | None = None
+    for i, s in enumerate(steps):
+        try:
+            return _restore_step(path, like, s), s
+        except Exception as e:  # noqa: BLE001 — any undecodable payload falls back
+            last_err = e
+            from repro.resilience.degrade import global_health
+
+            nxt = f"step_{steps[i + 1]}" if i + 1 < len(steps) else "none"
+            global_health().record(
+                "ckpt.restore", rung_from=f"step_{s}", rung_to=nxt, detail=repr(e)
+            )
+    raise last_err
+
+
+def committed_steps(path: str) -> list[int]:
+    """All committed step numbers under `path`, newest first."""
     if not os.path.isdir(path):
-        return None
-    steps = []
-    for name in os.listdir(path):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(path, name, _COMMIT)):
-                steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+        return []
+    steps = [
+        int(n.split("_")[1])
+        for n in os.listdir(path)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(path, n, _COMMIT))
+    ]
+    return sorted(steps, reverse=True)
+
+
+def sweep_stale(path: str) -> list[str]:
+    """Remove step entries lacking the COMMIT marker (incl. `.tmp` leftovers
+    from mid-write kills). Returns the removed names. Not safe to run
+    concurrently with a live writer on the same directory."""
+    if not os.path.isdir(path):
+        return []
+    removed = []
+    for name in sorted(os.listdir(path)):
+        p = os.path.join(path, name)
+        if not name.startswith("step_") or not os.path.isdir(p):
+            continue
+        if not os.path.exists(os.path.join(p, _COMMIT)):
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(name)
+    return removed
+
+
+def latest_step(path: str, *, sweep: bool = True) -> int | None:
+    """Newest committed step, or None. By default also sweeps stale
+    uncommitted directories (see `sweep_stale` for the concurrency caveat)."""
+    if sweep:
+        sweep_stale(path)
+    steps = committed_steps(path)
+    return steps[0] if steps else None
+
+
+def read_meta(path: str, step: int) -> dict:
+    """The meta.json of a committed step ({"step", "treedef", "extra"})."""
+    with open(os.path.join(_step_dir(path, step), "meta.json")) as f:
+        return json.load(f)
 
 
 def retain(path: str, keep: int = 3) -> None:
     """Garbage-collect all but the newest `keep` committed checkpoints."""
-    if not os.path.isdir(path):
-        return
-    steps = sorted(
-        int(n.split("_")[1]) for n in os.listdir(path)
-        if n.startswith("step_") and not n.endswith(".tmp")
-        and os.path.exists(os.path.join(path, n, _COMMIT))
-    )
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(path, f"step_{s:08d}"), ignore_errors=True)
+    for s in committed_steps(path)[keep:]:
+        shutil.rmtree(_step_dir(path, s), ignore_errors=True)
 
 
 class AsyncCheckpointer:
     """Overlaps checkpoint serialization with training: save() snapshots to
-    host memory (device_get) then writes on a daemon thread. wait() joins."""
+    host memory (device_get) then writes on a daemon thread. wait() joins.
+
+    A writer-thread failure is captured and re-raised by the next save() /
+    wait() / close() — never swallowed silently."""
 
     def __init__(self, path: str, keep: int = 3):
         self.path = path
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
 
     def save(self, tree: PyTree, *, step: int, extra: dict | None = None) -> None:
         self.wait()
         host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def _write():
-            save(self.path, host_tree, step=step, extra=extra)
-            retain(self.path, self.keep)
+            try:
+                save(self.path, host_tree, step=step, extra=extra, keep_last=self.keep)
+            except BaseException as e:  # noqa: BLE001 — surfaced on next save()/wait()
+                self._exc = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -133,3 +245,10 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def close(self) -> None:
+        """Drain the writer and surface any captured failure."""
+        self.wait()

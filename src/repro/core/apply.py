@@ -119,13 +119,24 @@ def sketch_both(
         return op.sketch_both(sk, use_kernel=use_kernel)
     if use_kernel is None:
         use_kernel = default_use_kernel()
+
+    def _xla():
+        KS = sketch_right(K, sk)
+        return KS, sketch_left(sk, KS)
+
     if use_kernel:
         from repro.kernels.accum_apply.ops import sketch_both_kernel
+        from repro.resilience.degrade import ladder_call
+
         # W stays float32: it was accumulated in f32 VMEM and feeds the d×d
-        # solve — downcasting to a low-precision K dtype would throw that away
-        return sketch_both_kernel(K, sk)
-    KS = sketch_right(K, sk)
-    return KS, sketch_left(sk, KS)
+        # solve — downcasting to a low-precision K dtype would throw that away.
+        # A failing Pallas dispatch degrades to the XLA gather pair (recorded
+        # in the global HealthReport), never to a wrong answer.
+        return ladder_call("kernel.dispatch", (
+            ("pallas:sketch_both", lambda: sketch_both_kernel(K, sk)),
+            ("xla:gather", _xla),
+        ))
+    return _xla()
 
 
 def gram_sketch(sk: AccumSketch) -> jax.Array:

@@ -201,17 +201,41 @@ class KernelOperator:
         if use_kernel is None:
             use_kernel = A.default_use_kernel()
         lm = jnp.take(self.X, idx.reshape(-1), axis=0)
-        if use_kernel:
-            from repro.kernels.accum_apply.ops import matfree_cols_kernel
-            return matfree_cols_kernel(Xq, lm, coef, kernel=self.kernel,
-                                       bandwidth=self.bandwidth, nu=self.nu)
         if chunk is None:
             # always budget by SLAB size, not row count: an (nq, m·d) slab
             # blows the ~16 MiB budget at large m·d even when nq is small
             # (nq ≤ _auto_chunk(m·d) degrades to a single unstreamed block,
             # so small problems pay no scan overhead)
             chunk = self._auto_chunk(idx.size)
-        return stream_cols(Xq, lm, coef, self.kernel_fn, chunk=chunk)
+
+        def _stream():
+            from repro.resilience import faults
+
+            faults.fault_point("kernel.stream")
+            return stream_cols(Xq, lm, coef, self.kernel_fn, chunk=chunk)
+
+        if use_kernel:
+            from repro.kernels.accum_apply.ops import matfree_cols_kernel
+            from repro.resilience.degrade import ladder_call
+
+            # three-rung ladder: fused Pallas kernel → XLA lax.scan streaming
+            # → one dense unstreamed slab (only when it fits the dense guard).
+            # Each rung drop is recorded in the global HealthReport.
+            rungs = [
+                ("pallas:matfree_cols",
+                 lambda: matfree_cols_kernel(Xq, lm, coef, kernel=self.kernel,
+                                             bandwidth=self.bandwidth,
+                                             nu=self.nu)),
+                ("xla:stream_cols", _stream),
+            ]
+            if Xq.shape[0] * idx.size <= DENSE_GUARD_N * 1024:
+                rungs.append(
+                    ("dense:one-slab",
+                     lambda: stream_cols(Xq, lm, coef, self.kernel_fn,
+                                         chunk=Xq.shape[0]))
+                )
+            return ladder_call("kernel.dispatch", rungs)
+        return _stream()
 
     # -- sketched applications ------------------------------------------------
     def sketch_cols(self, sk: AccumSketch, *, chunk: int | None = None,

@@ -31,21 +31,16 @@ from repro.core.sketch import AccumSketch
 
 
 def _solve_psd(M: jax.Array, b: jax.Array) -> jax.Array:
-    """Solve M x = b for PSD M with trace-scaled jitter + Cholesky, lstsq fallback.
+    """Solve M x = b for PSD M through the resilience solve ladder: trace-scaled
+    jitter + Cholesky, escalating ×10 jitter retries on non-finite results,
+    terminal lstsq — all in-graph (``lax.while_loop`` / ``lax.cond``, no host
+    syncs; pinned by the ``solve_psd_ladder`` trace contract).
 
-    The fallback is gated behind ``lax.cond`` on the finiteness check so the
-    dense lstsq runs only when the Cholesky actually failed — not on every
-    solve (both branches of a ``jnp.where`` would evaluate)."""
-    jitter = 1e-8 * (jnp.trace(M) / M.shape[0] + 1e-30)
-    Mj = M + jitter * jnp.eye(M.shape[0], dtype=M.dtype)
-    L, ok = jax.scipy.linalg.cho_factor(Mj, lower=True)
-    x = jax.scipy.linalg.cho_solve((L, ok), b)
+    On a healthy PSD input this is bitwise the old single-attempt solve (the
+    level-0 jitter is unchanged); the extra rungs trace but never execute."""
+    from repro.resilience.degrade import solve_psd_ladder
 
-    def _lstsq(_):
-        x_ls = jnp.linalg.lstsq(Mj, b[:, None] if b.ndim == 1 else b)[0]
-        return x_ls[:, 0] if b.ndim == 1 else x_ls
-
-    return jax.lax.cond(jnp.all(jnp.isfinite(x)), lambda _: x, _lstsq, None)
+    return solve_psd_ladder(M, b)[0]
 
 
 # --------------------------------------------------------------------------- #
@@ -138,7 +133,9 @@ def _fit_from_C(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
     """Given C = K S (n,d) and W = SᵀKS (d,d), solve the Woodbury system.
 
     With ``mesh`` (row-sharded C) the two n-contractions reduce via psum —
-    the d×d solve and the row-wise fitted values need no communication."""
+    the d×d solve and the row-wise fitted values need no communication.
+    Returns (theta, fitted, solve-health) — the health dict carries the solve
+    ladder's traced scalars and is threaded into ``SketchedKRR.info``."""
     n = C.shape[0]
     if mesh is not None:
         from repro.core import distributed as D
@@ -148,9 +145,11 @@ def _fit_from_C(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
     else:
         CtC = C.T @ C
         rhs = C.T @ y                          # SᵀK Y  (K symmetric)
+    from repro.resilience.degrade import solve_psd_ladder
+
     M = CtC + n * lam * W                      # SᵀK²S + nλ SᵀKS
-    theta = _solve_psd(M, rhs.astype(M.dtype))
-    return theta, C @ theta
+    theta, health = solve_psd_ladder(M, rhs.astype(M.dtype))
+    return theta, C @ theta, health
 
 
 def krr_sketched_fit(
@@ -173,10 +172,11 @@ def krr_sketched_fit(
     Woodbury solve and predict are unchanged."""
     op = A._operator(K)
     C, W = A.sketch_both(K, sk, use_kernel=use_kernel, mesh=mesh)
-    theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
+    theta, fitted, health = _fit_from_C(C, W, y, lam, mesh=mesh)
     if op is not None:
-        return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted, op=op)
-    return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted)
+        return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted,
+                           info=health, op=op)
+    return SketchedKRR(theta, sk, None, X_train, kernel_fn, fitted, info=health)
 
 
 def krr_sketched_fit_dense(
@@ -186,8 +186,8 @@ def krr_sketched_fit_dense(
     """Dense-sketch baseline path (Gaussian sketching, sparse RP): O(n²d)."""
     C = K @ S
     W = S.T @ C
-    theta, fitted = _fit_from_C(C, W, y, lam)
-    return SketchedKRR(theta, None, S, X_train, kernel_fn, fitted)
+    theta, fitted, health = _fit_from_C(C, W, y, lam)
+    return SketchedKRR(theta, None, S, X_train, kernel_fn, fitted, info=health)
 
 
 def _sketch_left_routed(sk, C, use_kernel: bool | None):
@@ -232,8 +232,8 @@ def krr_sketched_fit_matfree(
         W = _sketch_left_routed(sk, C, use_kernel)
     # symmetrize W: SᵀKS is symmetric in exact arithmetic
     W = 0.5 * (W + W.T)
-    theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
-    return SketchedKRR(theta, sk, None, X, kernel_fn, fitted, op=op)
+    theta, fitted, health = _fit_from_C(C, W, y, lam, mesh=mesh)
+    return SketchedKRR(theta, sk, None, X, kernel_fn, fitted, info=health, op=op)
 
 
 def _pcg_solve(C: jax.Array, W: jax.Array, y: jax.Array, lam: float,
@@ -351,7 +351,8 @@ def krr_sketched_fit_adaptive(
         key, K, d, m_max=m_max, tol=tol, probs=probs, estimator=estimator,
         check_every=check_every, use_kernel=use_kernel, mesh=mesh,
         schedule=schedule, scheme=scheme, scheme_lam=scheme_lam)
-    theta, fitted = _fit_from_C(C, W, y, lam, mesh=mesh)
+    theta, fitted, health = _fit_from_C(C, W, y, lam, mesh=mesh)
+    info = {**info, **health}
     if op is not None:
         return SketchedKRR(theta, sk, None, op.X, op.kernel_fn, fitted,
                            info=info, op=op)

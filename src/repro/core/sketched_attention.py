@@ -102,8 +102,20 @@ def accum_attention(
         use_kernel = default_use_kernel()
     if use_kernel:
         from repro.kernels.landmark_attention.ops import accum_attention_kernel
+        from repro.resilience.degrade import ladder_call
 
-        return accum_attention_kernel(q, k, v, sk, pinv_iters=pinv_iters)
+        def _xla():
+            return accum_attention(q, k, v, sk, pinv_iters=pinv_iters,
+                                   use_kernel=False)
+
+        # a failing Pallas dispatch degrades to this function's own XLA body
+        # (recorded in the global HealthReport), never to a wrong answer
+        return ladder_call("kernel.dispatch", (
+            ("pallas:accum_attention",
+             lambda: accum_attention_kernel(q, k, v, sk,
+                                            pinv_iters=pinv_iters)),
+            ("xla:landmark_softmax", _xla),
+        ))
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     kt = landmark_pool(k, sk, normalize=True)                       # (B,H,d,Dh)
     qt = landmark_pool(q, sk, normalize=True)                       # (B,H,d,Dh)

@@ -73,8 +73,11 @@ def _load(path: pathlib.Path) -> dict[str, list[int]]:
     key = str(path)
     if key in _MEM:
         return _MEM[key]
+    from repro.resilience import faults
+
     entries: dict[str, list[int]] = {}
     try:
+        faults.fault_point("autotune.load")  # simulated unreadable cache file
         raw = json.loads(path.read_text())
         # validate hard: a corrupt cache must fall back, not crash
         if isinstance(raw, dict):
@@ -82,8 +85,21 @@ def _load(path: pathlib.Path) -> dict[str, list[int]]:
                 if (isinstance(k, str) and isinstance(v, list)
                         and all(isinstance(x, int) and x > 0 for x in v)):
                     entries[k] = v
-    except (OSError, ValueError):
+    except FileNotFoundError:
+        entries = {}  # a missing cache is the normal cold start, not a fault
+    except faults.DeviceLost:
+        raise  # simulated preemption is fatal, not a degradation
+    except (OSError, ValueError, faults.FaultInjected) as e:
+        # corrupt/unreadable cache: fall back to the static table — but
+        # recorded, not silent (a fleet quietly losing its tunings is an
+        # operational smell worth surfacing)
+        from repro.resilience.degrade import global_health
+
         entries = {}
+        global_health().record(
+            "autotune.load", rung_from="measured-cache", rung_to="static-table",
+            detail=repr(e),
+        )
     _MEM[key] = entries
     return entries
 

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.sketch import AccumSketch
 from repro.kernels.accum_apply import autotune
+from repro.resilience import faults
 from repro.kernels.accum_apply.kernel import (
     accum_apply,
     accum_apply_left,
@@ -127,6 +128,7 @@ def sketch_right_kernel(
     """K S via the Pallas kernel; wide K is `lax.scan`ned over column chunks
     and the f32 partial products summed (the paper's accumulation identity).
     The scan keeps the jaxpr a single pallas_call regardless of N."""
+    faults.fault_point("kernel.dispatch")
     if interpret is None:
         interpret = default_interpret()
     R, N = K.shape
@@ -190,6 +192,7 @@ def sketch_left_kernel(
     never tuned for.  ``accum_apply_left`` keeps M row-major and accumulates
     the (d, c) output across row tiles instead.  Returns float32 (the output
     feeds d×d solves)."""
+    faults.fault_point("kernel.dispatch")
     if interpret is None:
         interpret = default_interpret()
     N, c = M.shape
@@ -330,6 +333,7 @@ def matfree_cols_kernel(
     coef: (m, d).  Arbitrary nq is row-padded to the tile and sliced back;
     the landmark count is sublane-padded with zero rows (zero coefficient
     rows contribute nothing).  Returns (nq, d) float32."""
+    faults.fault_point("kernel.dispatch")
     if interpret is None:
         interpret = default_interpret()
     nq, p = Xq.shape
@@ -388,6 +392,7 @@ def sketch_both_kernel(
     W accumulates across grid steps in the kernel — no second pass over C and
     no second HBM read. Arbitrary n and d are padded to the block grid (padded
     S rows are never indexed, so W is exact) and sliced back. W is float32."""
+    faults.fault_point("kernel.dispatch")
     if interpret is None:
         interpret = default_interpret()
     n, n2 = K.shape

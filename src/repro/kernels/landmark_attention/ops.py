@@ -26,6 +26,7 @@ from repro.core.sketch import AccumSketch
 from repro.core.sketched_attention import _newton_schulz_pinv, landmark_pool
 from repro.kernels.accum_apply import autotune
 from repro.kernels.accum_apply.ops import default_interpret
+from repro.resilience import faults
 from repro.kernels.landmark_attention.kernel import (
     landmark_attention,
     landmark_stats,
@@ -139,7 +140,12 @@ def accum_attention_kernel(
       (W, BmV) = `landmark_stats` — ONE fused sweep over S (no (L, S) Bm);
       M = W⁺ · BmV  [small d×d, plain XLA Newton–Schulz];
       out = softmax(QK̃ᵀ)·M — `landmark_attend` [Pallas, O(S·L)].
-    The F·M stage cannot fuse into the sweep: M depends on the completed W."""
+    The F·M stage cannot fuse into the sweep: M depends on the completed W.
+
+    This entry visits the `kernel.dispatch` fault site (the per-stage helpers
+    deliberately do not — they run inside jitted decode, where recovery is the
+    engine's health screen, not an eager ladder)."""
+    faults.fault_point("kernel.dispatch")
     if interpret is None:
         interpret = default_interpret()
     kt = landmark_pool(k, sk, normalize=True)

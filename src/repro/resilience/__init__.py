@@ -1,0 +1,23 @@
+"""Resilience layer: fault injection, degradation ladders, health reporting.
+
+See ``docs/resilience.md`` for the fault-site catalog, the ladder table and
+the checkpoint/resume bitwise guarantee.
+"""
+from repro.resilience.degrade import (
+    HealthEvent,
+    HealthReport,
+    global_health,
+    ladder_call,
+    solve_psd_ladder,
+)
+from repro.resilience.faults import (
+    SITES,
+    DeviceLost,
+    FaultInjected,
+    active_plan,
+    corrupt,
+    fault_point,
+    mangle_matrix,
+    poison,
+    reset,
+)

@@ -1,0 +1,59 @@
+"""Subprocess worker for the cross-process kill-and-resume bitwise pin.
+
+Usage: python tests/resume_worker.py <mode> <ckpt_dir>
+
+  ref    — no checkpointing, no faults: print the reference tokens as JSON;
+  kill   — generate with checkpointing armed; the parent sets a
+           REPRO_FAULT_PLAN that kills a decode dispatch, so this process is
+           expected to die with DeviceLost → exit code 17, "KILLED" on stdout;
+  resume — fresh process, no faults, same ckpt_dir: resume the half-finished
+           request and print its tokens as JSON.
+
+The parent (tests/test_resilience.py) asserts ref == resume bitwise — the
+counter-based RNG makes (cache, emitted tokens) the complete resume state, so
+a request killed mid-decode and resumed in a NEW PROCESS must reproduce the
+uninterrupted token stream exactly.
+
+Everything about the request (arch, prompts, sampling temperature, seed) is
+fixed here so all three invocations describe the same request.
+"""
+import json
+import sys
+
+import numpy as np
+
+
+def main() -> int:
+    mode, ckdir = sys.argv[1], sys.argv[2]
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models.model import init_params
+    from repro.resilience import faults
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = reduced(ARCHS["stablelm-3b"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, L, n_new = 2, 8, 6
+    prompts = (
+        np.random.default_rng(0).integers(0, cfg.vocab_size, size=(B, L))
+        .astype(np.int32)
+    )
+    sc = ServeConfig(
+        max_len=L + n_new + 2, use_sketch=True, temperature=0.7, seed=3,
+        ckpt_dir=None if mode == "ref" else ckdir, ckpt_every=2,
+    )
+    eng = Engine(cfg, params, sc)
+    try:
+        toks, _ = eng.generate(
+            prompts, n_new, request_id=None if mode == "ref" else "req"
+        )
+    except faults.DeviceLost:
+        print("KILLED")
+        return 17
+    print(json.dumps(toks.tolist()))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
